@@ -1,0 +1,158 @@
+"""Paper Figures 1-3: convergence vs effective passes + communication cost.
+
+One synthetic dataset per task family (stats matched to the paper's LIBSVM
+sets, d capped for the CPU reference solve), all five methods, paper
+hyper-struct: N=10, ER(0.4), lambda=1/(10Q), ||a||=1.
+
+Emits a markdown/CSV table per task into experiments/convergence_<task>.md.
+"""
+from __future__ import annotations
+
+import pathlib
+
+import numpy as np
+
+from repro.core import mixing, reference
+from repro.core.baselines import run_dlm, run_extra, run_ssda
+from repro.core.dsba import DSBAConfig, run
+from repro.core.operators import OperatorSpec
+from repro.core.sparse_comm import dense_doubles_per_iter, sparse_doubles_per_iter
+from repro.data.synthetic import make_classification, make_regression
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
+
+# per-method tuned step sizes (grid-searched; the paper also tunes per-method).
+# The problem is deliberately run at the paper's lambda = 1/(10Q), i.e.
+# kappa ~ L/lambda ~ 10^3: DSBA's backward step stays stable at alpha = 4
+# while the forward/deterministic methods are condition-limited — exactly
+# Table 1's story.
+TUNING = {
+    "ridge": dict(dsba=4.0, dsa=0.5, extra=0.5, dlm=(0.2, 0.5),
+                  ssda=(1e-4, 0.0)),
+    "logistic": dict(dsba=8.0, dsa=1.0, extra=1.0, dlm=(0.1, 0.5),
+                     ssda=(1e-4, 0.0)),
+    "auc": dict(dsba=1.0, dsa=0.05),
+}
+
+
+def setup(task: str, n=10, q=100, d=800, k=30, seed=0):
+    if task == "ridge":
+        data = make_regression(n, q, d, k=k, seed=seed)
+        spec = OperatorSpec("ridge")
+    elif task == "logistic":
+        data = make_classification(n, q, d, k=k, seed=seed)
+        spec = OperatorSpec("logistic")
+    else:
+        data = make_classification(n, q, d, k=k, positive_ratio=0.3, seed=seed)
+        spec = OperatorSpec("auc", p=data.positive_ratio())
+    graph = mixing.erdos_renyi_graph(n, 0.4, seed=1)
+    w = mixing.laplacian_mixing(graph)
+    lam = 1.0 / (10.0 * data.total)
+    z_star = reference.solve_root(spec, data, lam)
+    return data, spec, graph, w, lam, z_star
+
+
+def run_all(task: str, passes: int = 120):
+    data, spec, graph, w, lam, z_star = setup(task)
+    q = data.q
+    tune = TUNING[task]
+    out = {}
+
+    res = run(DSBAConfig(spec, tune["dsba"], lam), data, w, passes * q,
+              z_star=z_star, record_every=q)
+    out["DSBA"] = res.dist2
+    res = run(DSBAConfig(spec, tune["dsa"], lam, method="dsa"), data, w,
+              passes * q, z_star=z_star, record_every=q)
+    out["DSA"] = res.dist2
+
+    if task != "auc":  # paper: SSDA n/a for AUC; DLM does not converge there
+        res = run_extra(spec, data, w, tune["extra"], lam, passes,
+                        z_star=z_star, record_every=1)
+        out["EXTRA"] = res.dist2
+        c, beta = tune["dlm"]
+        res = run_dlm(spec, data, graph, c, beta, lam, passes,
+                      z_star=z_star, record_every=1)
+        out["DLM"] = res.dist2
+        eta, mom = tune["ssda"]
+        res = run_ssda(spec, data, w, eta, mom, lam, passes,
+                       z_star=z_star, record_every=1)
+        out["SSDA"] = res.dist2
+    else:
+        res = run_extra(spec, data, w, 0.5, lam, passes, z_star=z_star,
+                        record_every=1)
+        out["EXTRA"] = res.dist2
+
+    # communication: DOUBLEs at the hottest node per effective pass
+    comm = {}
+    dense = int(dense_doubles_per_iter(graph, data.d + spec.tail_dim).max())
+    sparse = sparse_doubles_per_iter(data.n_nodes, data.k, spec.tail_dim)
+    comm["DSBA-s"] = sparse * q
+    comm["DSBA(dense)"] = dense * q
+    comm["DSA-s"] = sparse * q
+    comm["EXTRA/DLM/SSDA"] = dense
+    return data, out, comm
+
+
+def render(task: str, passes: int = 120) -> str:
+    data, out, comm = run_all(task, passes)
+    lines = [
+        f"### {task} (d={data.d}, rho={data.rho:.4f}, N={data.n_nodes}, "
+        f"q={data.q})",
+        "",
+        "| effective passes | " + " | ".join(out) + " |",
+        "|---|" + "---|" * len(out),
+    ]
+    n_rows = max(len(v) for v in out.values())
+    marks = sorted(
+        {0, 1, 3, 7, 15, 31, passes // 2 - 1, passes - 1} & set(range(n_rows))
+    )
+    for i in marks:
+        cells = []
+        for v in out.values():
+            cells.append(f"{v[min(i, len(v) - 1)]:.2e}")
+        lines.append(f"| {i + 1} | " + " | ".join(cells) + " |")
+    lines += [
+        "",
+        "Communication per effective pass, hottest node (DOUBLEs): "
+        + ", ".join(f"{k}={v:,}" for k, v in comm.items()),
+        "",
+    ]
+
+    # ---- the paper's right panels: suboptimality vs COMMUNICATION --------
+    # DSBA-s / DSA-s pay sparse_doubles per stochastic pass; deterministic
+    # methods pay dense doubles per iteration. Tabulate dist^2 at equal
+    # hottest-node DOUBLE budgets.
+    per_pass = {
+        "DSBA": comm["DSBA-s"],  # sparse implementation (Section 5.1)
+        "DSA": comm["DSA-s"],
+    }
+    for m in out:
+        if m not in per_pass:
+            per_pass[m] = comm["EXTRA/DLM/SSDA"]
+    budgets = [comm["DSBA-s"] * 8, comm["EXTRA/DLM/SSDA"] * 4,
+               comm["EXTRA/DLM/SSDA"] * 16]
+    lines += [
+        "| DOUBLEs received (hottest node) | "
+        + " | ".join(out) + " |",
+        "|---|" + "---|" * len(out),
+    ]
+    for b in budgets:
+        cells = []
+        for m, v in out.items():
+            i = min(int(b // per_pass[m]), len(v)) - 1
+            cells.append(f"{v[i]:.2e}" if i >= 0 else "-")
+        lines.append(f"| {b:,} | " + " | ".join(cells) + " |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(passes: int = 120):
+    OUT.mkdir(exist_ok=True, parents=True)
+    for task in ("ridge", "logistic", "auc"):
+        md = render(task, passes)
+        (OUT / f"convergence_{task}.md").write_text(md)
+        print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Fill EXPERIMENTS.md table placeholders from recorded dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+
+from benchmarks.roofline import render, render_dryrun
+
+EXP = pathlib.Path(__file__).resolve().parents[1] / "EXPERIMENTS.md"
+
+MARKERS = {
+    "DRYRUN_SINGLE": lambda: "### Single pod (16x16 = 256 chips)\n\n"
+    + render_dryrun("single"),
+    "DRYRUN_MULTI": lambda: "### Multi-pod (2x16x16 = 512 chips; pod axis = "
+    "DSBA gossip)\n\n" + render_dryrun("multi"),
+    "ROOFLINE_SINGLE": lambda: render("single"),
+}
+
+
+def main():
+    text = EXP.read_text()
+    for name, fn in MARKERS.items():
+        marker = f"<!-- {name} -->"
+        block_re = re.compile(
+            re.escape(marker) + r".*?(?=\n<!-- |\n## |\Z)", re.S
+        )
+        replacement = marker + "\n\n" + fn() + "\n"
+        if marker in text:
+            text = block_re.sub(replacement.replace("\\", "\\\\"), text)
+    EXP.write_text(text)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

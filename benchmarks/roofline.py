@@ -1,0 +1,121 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--tag x]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+EXP = pathlib.Path(__file__).resolve().parents[1] / "experiments"
+DRY = EXP / "dryrun"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def fmt_b(x):
+    for unit, f in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= f:
+            return f"{x / f:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(mesh: str, tag: str = ""):
+    recs = []
+    suffix = f"_{mesh}{('_' + tag) if tag else ''}.json"
+    for p in sorted(DRY.glob(f"*{suffix}")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def render(mesh: str = "single", tag: str = "") -> str:
+    recs = load(mesh, tag)
+    if not recs:
+        return f"(no dry-run records for mesh={mesh} tag={tag!r})"
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful-flop ratio | roofline frac | temp/dev | coll bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | FAILED: "
+                f"{r.get('error', '?')[:60]} | | | | | | | |"
+            )
+            continue
+        rl = r["roofline"]
+        lines.append(
+            "| {a} | {s} | {c} | {m} | {x} | **{dom}** | {ur:.2f} | {rf:.1%} "
+            "| {tmp} | {cb} |".format(
+                a=r["arch"], s=r["shape"],
+                c=fmt_s(rl["compute_s"]), m=fmt_s(rl["memory_s"]),
+                x=fmt_s(rl["collective_s"]), dom=rl["dominant"],
+                ur=rl["useful_flop_ratio"], rf=rl["roofline_fraction"],
+                tmp=fmt_b(r["memory"]["temp_bytes"]),
+                cb=fmt_b(r["collective_bytes"]),
+            )
+        )
+    return "\n".join(lines)
+
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def render_dryrun(mesh: str = "single", tag: str = "") -> str:
+    """§Dry-run table: per-device bytes + collective schedule + compile."""
+    recs = load(mesh, tag)
+    if not recs:
+        return f"(no dry-run records for mesh={mesh})"
+    lines = [
+        "| arch | shape | state+args/dev | temp/dev | fits 16GB? | "
+        "collectives (count) | compile |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | |")
+            continue
+        m = r["memory"]
+        total = m["argument_bytes"] + m["temp_bytes"]
+        colls = r["collectives"]["count"]
+        cstr = ", ".join(
+            f"{k.replace('all-', 'a').replace('collective-', 'c')}:{int(v)}"
+            for k, v in sorted(colls.items())
+        ) or "none"
+        lines.append(
+            "| {a} | {s} | {arg} | {tmp} | {fit} | {c} | {t:.0f}s |".format(
+                a=r["arch"], s=r["shape"], arg=fmt_b(m["argument_bytes"]),
+                tmp=fmt_b(m["temp_bytes"]),
+                fit="yes" if total <= HBM_PER_CHIP else
+                f"no ({total / HBM_PER_CHIP:.1f}x)",
+                c=cstr, t=r.get("compile_s", 0),
+            )
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--table", default="roofline",
+                    choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    if args.table == "dryrun":
+        print(render_dryrun(args.mesh, args.tag))
+    else:
+        print(render(args.mesh, args.tag))
+
+
+if __name__ == "__main__":
+    main()

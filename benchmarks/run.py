@@ -1,0 +1,149 @@
+"""Benchmark harness — one entry per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints `name,us_per_call,derived` CSV rows. Convergence/communication
+benchmarks reproduce the paper's experiments (Figures 1-3, Table 1); kernel
+and step benches time this framework's hot paths on CPU (reference path —
+TPU wall-clock is out of scope for this container; see EXPERIMENTS.md
+§Roofline for the TPU performance model).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+
+def timeit(fn, *args, n=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def bench_dsba_step(rows):
+    from repro.core import mixing
+    from repro.core.dsba import DSBAConfig, dsba_step, draw_indices, init_state
+    from repro.core.operators import OperatorSpec
+    from repro.core.mixing import w_tilde
+    from repro.data.synthetic import make_regression
+    import jax.numpy as jnp
+
+    for d, k in ((2_000, 40), (50_000, 160)):
+        data = make_regression(10, 100, d, k=k, seed=0)
+        g = mixing.erdos_renyi_graph(10, 0.4, seed=1)
+        w = jnp.asarray(mixing.laplacian_mixing(g))
+        wt = jnp.asarray(w_tilde(np.asarray(w)))
+        cfg = DSBAConfig(OperatorSpec("ridge"), 0.5, 1e-3)
+        st = init_state(cfg, data, jnp.zeros((10, d)))
+        idx = jnp.asarray(draw_indices(1, 10, 100)[0])
+        f = jax.jit(lambda s, i: dsba_step(
+            cfg, w, wt, jnp.asarray(data.idx), jnp.asarray(data.val),
+            jnp.asarray(data.y), s, i))
+        us = timeit(f, st, idx)
+        rows.append((f"dsba_step_d{d}", us, f"N=10 q=100 k={k}"))
+
+
+def bench_kernels(rows, fast):
+    from repro.kernels import ref as R
+    import jax.numpy as jnp
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, Hq, Hkv, S, D = 1, 8, 2, 1024 if fast else 2048, 64
+    q = jax.random.normal(ks[0], (B, Hq, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    f = jax.jit(lambda q, k, v: R.attention_ref(q, k, v, causal=True))
+    us = timeit(f, q, k, v, n=3)
+    flops = 4 * B * Hq * S * S * D / 2
+    rows.append((f"attention_ref_S{S}", us, f"{flops / us / 1e3:.1f} GFLOP/s"))
+
+    from repro.models.ssm import _ssd_chunked
+    Bz, Ssz, nh, hd, ds = 1, 1024, 8, 64, 64
+    xh = jax.random.normal(ks[0], (Bz, Ssz, nh, hd))
+    dt = jax.random.uniform(ks[1], (Bz, Ssz, nh), minval=0.1, maxval=1.0)
+    al = -dt * 0.1
+    Bc = jax.random.normal(ks[2], (Bz, Ssz, ds))
+    f = jax.jit(lambda *a: _ssd_chunked(*a, 256)[0])
+    us = timeit(f, xh, dt, al, Bc, Bc, n=3)
+    rows.append((f"ssd_chunked_S{Ssz}", us, f"nh={nh} ds={ds}"))
+
+
+def bench_gossip(rows):
+    import dataclasses
+    from repro.configs import get_reduced
+    from repro.core.gossip import (GossipConfig, init_gossip_state,
+                                   make_gossip_train_step)
+    from repro.optim.adam import AdamConfig
+    from repro.train.step import TrainConfig
+
+    cfg = dataclasses.replace(get_reduced("minitron_8b"), n_layers=2)
+    tc = TrainConfig(optimizer=AdamConfig())
+    for mode, comp in (("allreduce", "none"), ("dsba", "none"),
+                       ("dsgd", "topk")):
+        gc = GossipConfig(n_pods=4, mode=mode, compression=comp,
+                          topk_ratio=0.05)
+        st = init_gossip_state(cfg, tc, gc, jax.random.PRNGKey(0))
+        step = jax.jit(make_gossip_train_step(None, cfg, tc, gc))
+        key = jax.random.PRNGKey(1)
+        toks = jax.random.randint(key, (4, 2, 65), 0, cfg.vocab_size)
+        batch = {"tokens": toks[..., :-1], "targets": toks[..., 1:]}
+        us = timeit(step, st, batch, n=3)
+        rows.append((f"gossip_step_{mode}_{comp}", us, "pods=4 tiny-lm"))
+
+
+def bench_convergence_tables(rows, fast):
+    from benchmarks import bench_convergence as BC
+
+    passes = 15 if fast else 120
+    tasks = ("ridge",) if fast else ("ridge", "logistic", "auc")
+    for task in tasks:
+        t0 = time.perf_counter()
+        md = BC.render(task, passes)
+        BC.OUT.mkdir(exist_ok=True, parents=True)
+        (BC.OUT / f"convergence_{task}.md").write_text(md)
+        dt = (time.perf_counter() - t0) * 1e6
+        final = [ln for ln in md.splitlines() if ln.startswith("| ")][-1]
+        rows.append((f"paper_fig_{task}", dt, final.replace("|", "/").strip()))
+
+
+def bench_comm_table(rows):
+    from repro.core.sparse_comm import sparse_doubles_per_iter
+    from benchmarks import bench_comm as BCm
+
+    t0 = time.perf_counter()
+    data, graph, steady, res = BCm.measure()
+    dt = (time.perf_counter() - t0) * 1e6
+    model = sparse_doubles_per_iter(data.n_nodes, data.k, 0)
+    ok = (steady == model).all() and res.recon_max_err < 1e-9
+    rows.append(("paper_table1_comm", dt,
+                 f"measured==model({model})={bool(ok)} recon_err={res.recon_max_err:.1e}"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    rows: list[tuple[str, float, str]] = []
+    bench_dsba_step(rows)
+    bench_kernels(rows, args.fast)
+    bench_gossip(rows)
+    bench_comm_table(rows)
+    bench_convergence_tables(rows, args.fast)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

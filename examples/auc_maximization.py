@@ -1,0 +1,47 @@
+"""Paper Figure-3 experiment: decentralized l2-relaxed AUC maximization.
+
+AUC involves PAIRWISE losses that classic decentralized methods cannot
+handle with one sample per step; the saddle reformulation (Ying et al. 2016,
+eq. 11-12) + DSBA's monotone-operator view makes it a one-sample-per-step
+decentralized problem with closed-form resolvents (paper appendix 9.7).
+
+    PYTHONPATH=src python examples/auc_maximization.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core import mixing, reference
+from repro.core.dsba import DSBAConfig, run
+from repro.core.operators import OperatorSpec
+from repro.data.synthetic import make_classification
+
+
+def main():
+    N, q, d = 10, 50, 300
+    data = make_classification(N, q, d, k=10, positive_ratio=0.25, seed=0)
+    graph = mixing.erdos_renyi_graph(N, 0.4, seed=1)
+    W = mixing.laplacian_mixing(graph)
+    p = data.positive_ratio()
+    spec = OperatorSpec("auc", p=p)
+    lam = 1.0 / (10 * data.total)
+    z_star = reference.solve_root(spec, data, lam)
+
+    cfg = DSBAConfig(spec, alpha=1.0, lam=lam)
+    res = run(cfg, data, W, steps=30 * q, z_star=z_star, record_every=2 * q,
+              keep_snapshots=True)
+
+    print(f"positive ratio p = {p:.3f};  z in R^{d + 3} = [w; a; b; theta]")
+    print(f"{'passes':>7} {'dist^2 to saddle':>18} {'AUC (node mean)':>16}")
+    for i, (it, d2) in enumerate(zip(res.iters, res.dist2)):
+        w_nodes = res.zs[i][:, :d]
+        auc = np.mean([reference.auc_score(w, data) for w in w_nodes])
+        print(f"{it // q:7d} {d2:18.3e} {auc:16.4f}")
+    auc_star = reference.auc_score(z_star[:d], data)
+    print(f"\nAUC at the exact saddle point: {auc_star:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Quickstart: decentralized ridge regression with DSBA in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core import mixing, reference
+from repro.core.dsba import DSBAConfig, run
+from repro.core.operators import OperatorSpec
+from repro.data.synthetic import make_regression
+
+# 10 nodes, Erdos-Renyi(0.4) topology — the paper's setup (Section 7)
+N, Q_PER_NODE, DIM = 10, 50, 200
+data = make_regression(n_nodes=N, q=Q_PER_NODE, d=DIM, k=10, seed=0)
+graph = mixing.erdos_renyi_graph(N, 0.4, seed=1)
+W = mixing.laplacian_mixing(graph)
+
+spec = OperatorSpec("ridge")
+lam = 1.0 / (10 * data.total)  # paper: lambda = 1/(10 Q)
+z_star = reference.solve_root(spec, data, lam)
+
+cfg = DSBAConfig(spec=spec, alpha=2.0, lam=lam)  # backward steps: large alpha is stable
+res = run(cfg, data, W, steps=8000, z_star=z_star, record_every=500)
+
+print("iter   mean ||z_n - z*||^2      consensus error")
+for it, d2, ce in zip(res.iters, res.dist2, res.consensus):
+    print(f"{it:5d}   {d2:20.3e}   {ce:16.3e}")
+print(f"\nlinear convergence to the centralized optimum: {res.dist2[-1]:.2e}")

@@ -1,0 +1,151 @@
+"""Sharded checkpointing with atomic commit and async write.
+
+Layout (tensorstore-free, per-host):
+
+  <dir>/step_<N>.tmp/           staged writes
+  <dir>/step_<N>/               committed (atomic rename)
+      manifest.json             tree structure + shapes/dtypes + metadata
+      arr_<i>.npy               one file per leaf (host-local shard in a
+                                multi-host deployment; full array here)
+
+Fault-tolerance contract:
+  * a crash mid-write leaves only a .tmp dir -> ignored on restore
+  * restore picks the newest COMMITTED step
+  * saves can run on a background thread (async=True) so the train loop
+    overlaps the host write with the next steps
+  * keep_last prunes old steps after commit
+
+Works for any pytree of arrays (train state, gossip state incl. per-pod
+replicas, paper-core DSBA state).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory, step: int, tree, *, keep_last: int = 3,
+                    metadata: dict | None = None) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    tmp = directory / f"step_{step}.tmp"
+    final = directory / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    paths, leaves, _ = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "metadata": metadata or {},
+        "leaves": [],
+    }
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(leaf)
+        np.save(tmp / f"arr_{i}.npy", arr)
+        manifest["leaves"].append(
+            {"path": p, "file": f"arr_{i}.npy", "shape": list(arr.shape),
+             "dtype": str(arr.dtype)}
+        )
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic commit
+
+    # prune
+    steps = sorted(committed_steps(directory))
+    for s in steps[:-keep_last] if keep_last else []:
+        shutil.rmtree(directory / f"step_{s}", ignore_errors=True)
+    return final
+
+
+def committed_steps(directory) -> list[int]:
+    directory = pathlib.Path(directory)
+    out = []
+    if not directory.exists():
+        return out
+    for p in directory.iterdir():
+        if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp"):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+    return sorted(out)
+
+
+def restore_checkpoint(directory, tree_like, step: int | None = None):
+    """Restore into the structure of `tree_like`. Returns (tree, step) or
+    (None, None) when no committed checkpoint exists."""
+    directory = pathlib.Path(directory)
+    steps = committed_steps(directory)
+    if not steps:
+        return None, None
+    step = steps[-1] if step is None else step
+    d = directory / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    paths, leaves, treedef = _flatten_with_paths(tree_like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    if set(paths) != set(by_path):
+        missing = set(paths) ^ set(by_path)
+        raise ValueError(f"checkpoint tree mismatch; differing paths: {missing}")
+    new_leaves = []
+    for p, like in zip(paths, leaves):
+        e = by_path[p]
+        arr = np.load(d / e["file"])
+        if tuple(arr.shape) != tuple(np.shape(like)):
+            raise ValueError(f"shape mismatch at {p}: {arr.shape} vs {np.shape(like)}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=like.dtype if hasattr(like, "dtype") else None))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+class CheckpointManager:
+    """Async checkpointing: save() stages a host copy and writes on a
+    background thread; wait() joins before exit/next save."""
+
+    def __init__(self, directory, keep_last: int = 3):
+        self.directory = pathlib.Path(directory)
+        self.keep_last = keep_last
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save(self, step: int, tree, *, metadata=None, async_: bool = True):
+        self.wait()
+        # device->host copy happens here, synchronously (cheap vs the write)
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+        if not async_:
+            save_checkpoint(self.directory, step, host_tree,
+                            keep_last=self.keep_last, metadata=metadata)
+            return
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree,
+                                keep_last=self.keep_last, metadata=metadata)
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore(self, tree_like, step=None):
+        self.wait()
+        return restore_checkpoint(self.directory, tree_like, step)

@@ -1,0 +1,50 @@
+"""Assigned-architecture registry: --arch <id> selects one of these.
+
+Each module exposes CONFIG (the exact assigned configuration) and reduced()
+(a small same-family config for CPU smoke tests). dsba_paper.py carries the
+paper's own convex-experiment configurations.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "minitron_8b",
+    "gemma2_2b",
+    "qwen2_72b",
+    "llama3_405b",
+    "zamba2_1p2b",
+    "whisper_small",
+    "kimi_k2",
+    "qwen2_moe",
+    "chameleon_34b",
+    "mamba2_1p3b",
+]
+
+# external ids (with dashes/dots) -> module names
+ALIASES = {
+    "minitron-8b": "minitron_8b",
+    "gemma2-2b": "gemma2_2b",
+    "qwen2-72b": "qwen2_72b",
+    "llama3-405b": "llama3_405b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "whisper-small": "whisper_small",
+    "kimi-k2-1t-a32b": "kimi_k2",
+    "qwen2-moe-a2.7b": "qwen2_moe",
+    "chameleon-34b": "chameleon_34b",
+    "mamba2-1.3b": "mamba2_1p3b",
+}
+
+
+def get_config(arch: str):
+    mod = ALIASES.get(arch, arch).replace("-", "_")
+    return importlib.import_module(f"repro.configs.{mod}").CONFIG
+
+
+def get_reduced(arch: str):
+    mod = ALIASES.get(arch, arch).replace("-", "_")
+    return importlib.import_module(f"repro.configs.{mod}").reduced()
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,34 @@
+"""llama3-405b [dense]: GQA, 128k vocab [arXiv:2407.21783; unverified].
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.
+
+param_dtype is bf16 here: at 405B params, fp32 master + fp32 Adam states do
+not fit 256 x 16 GB v5e HBM; bf16 params + fp32 Adam m/v (10 bytes/param
+sharded ZeRO-3) do. See EXPERIMENTS.md §Dry-run for the measured bytes.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=53248,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    param_dtype=jnp.bfloat16,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, remat="none", param_dtype=jnp.float32,
+    )

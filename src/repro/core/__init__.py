@@ -1,0 +1,6 @@
+# The paper's primary contribution: DSBA (Decentralized Stochastic Backward
+# Aggregation) and its substrate — monotone operators, mixing matrices,
+# baselines, sparse communication, and the pod-axis gossip generalization.
+from repro.core.operators import OperatorSpec  # noqa: F401
+from repro.core.dsba import DSBAConfig, DSBAState, dsba_step, init_state, run  # noqa: F401
+from repro.core import mixing, baselines, reference  # noqa: F401

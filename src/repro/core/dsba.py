@@ -1,0 +1,310 @@
+"""DSBA — Decentralized Stochastic Backward Aggregation (paper Algorithm 1).
+
+Implements the node-local recursion (eqs. 27-31), vectorized over all N
+nodes, with the SAGA scalar table (O(q) storage via linear predictors,
+Schmidt et al. 2017) and sparse per-sample updates in padded-CSR form.
+
+Exact l2 regularization
+-----------------------
+The paper regularizes B^lam = B + lam*I and computes the resolvent via the
+scaling trick J_{alpha B^lam}(psi) = J_{rho alpha B}(rho psi),
+rho = 1/(1+lam*alpha). The lam*I part is deterministic, so we keep it OUT of
+the SAGA table (otherwise delta would densify, breaking the sparse
+communication claim) and carry it exactly through the differencing of (24):
+
+  (1+alpha*lam) z^{t+1} + alpha B_{n,i}(z^{t+1})
+      = sum_m w~_{nm} (2 z_m^t - z_m^{t-1})            # mixing
+        + alpha*lam z_n^t                              # exact reg carry-over
+        + alpha ((q-1)/q delta_n^{t-1} + phi_{n,i}^t)  # SAGA correction
+      =: psi_n^t                                        (generalizes eq. 29)
+
+  t = 0 (eq. 31):  psi_n^0 = sum_m w_{nm} z_m^0 + alpha (phi_{n,i} - phibar_n)
+
+Setting lam = 0 recovers the paper's recursion verbatim.
+
+DSA (Mokhtari & Ribeiro 2016) is recovered by evaluating delta at z^t instead
+of z^{t+1} (Remark 5.1) and taking a forward step — `method='dsa'`. With a
+single node DSBA degenerates to Point-SAGA (tested in tests/test_dsba.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.operators import OperatorSpec
+from repro.core.mixing import w_tilde
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DSBAState:
+    """Vectorized state of Algorithm 1 across all N nodes."""
+
+    z: jax.Array  # (N, D)  current iterates, D = d + tail_dim
+    z_prev: jax.Array  # (N, D)
+    table_g: jax.Array  # (N, q)    SAGA scalar coefficients c_{n,i}
+    table_tail: jax.Array  # (N, q, t) SAGA tail outputs (t = 0 or 3)
+    phibar: jax.Array  # (N, D)    mean of table operator outputs
+    dg_prev: jax.Array  # (N,)      delta^{t-1} coefficient
+    didx_prev: jax.Array  # (N, k)  delta^{t-1} sparse pattern
+    dval_prev: jax.Array  # (N, k)
+    dtail_prev: jax.Array  # (N, t)
+    step: jax.Array  # ()
+
+
+@dataclasses.dataclass(frozen=True)
+class DSBAConfig:
+    spec: OperatorSpec
+    alpha: float  # step size
+    lam: float = 0.0  # l2 regularization
+    method: str = "dsba"  # 'dsba' (backward) | 'dsa' (forward, Remark 5.1)
+
+
+def init_state(cfg: DSBAConfig, data, z0: jax.Array) -> DSBAState:
+    """phi^0_{n,i} = B_{n,i}(z^0) (Algorithm 1 line 1), delta^0 = 0."""
+    spec = cfg.spec
+    idx = jnp.asarray(data.idx)
+    val = jnp.asarray(data.val)
+    y = jnp.asarray(data.y)
+    n, q, k = idx.shape
+    t = spec.tail_dim
+    d = data.d
+    if z0.shape != (n, d + t):
+        raise ValueError(f"z0 shape {z0.shape} != {(n, d + t)}")
+
+    u = jnp.einsum(
+        "nqk,nqk->nq", val, jax.vmap(lambda zn, ix: zn[ix])(z0[:, :d], idx)
+    )
+    tails = jnp.broadcast_to(z0[:, None, d:], (n, q, t))
+    g, tail_out = spec.coeff_and_tail(u, y, tails)
+
+    def node_phibar(g_n, idx_n, val_n, tail_n):
+        head = jnp.zeros((d,), z0.dtype).at[idx_n.reshape(-1)].add(
+            (g_n[:, None] * val_n).reshape(-1) / q
+        )
+        return jnp.concatenate([head, tail_n.mean(0)])
+
+    phibar = jax.vmap(node_phibar)(g, idx, val, tail_out)
+    return DSBAState(
+        z=z0,
+        z_prev=z0,
+        table_g=g,
+        table_tail=tail_out,
+        phibar=phibar,
+        dg_prev=jnp.zeros((n,), z0.dtype),
+        didx_prev=jnp.zeros((n, k), idx.dtype),
+        dval_prev=jnp.zeros((n, k), z0.dtype),
+        dtail_prev=jnp.zeros((n, t), z0.dtype),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _gather_rows(a, i):
+    """Per-node gather of sampled rows: a (N, q, ...), i (N,) -> (N, ...)."""
+    return jnp.take_along_axis(
+        a, i.reshape(-1, *([1] * (a.ndim - 1))), axis=1
+    ).squeeze(1)
+
+
+def dsba_step(
+    cfg: DSBAConfig,
+    w: jax.Array,
+    wt: jax.Array,
+    data_idx: jax.Array,
+    data_val: jax.Array,
+    data_y: jax.Array,
+    state: DSBAState,
+    i_t: jax.Array,
+    mix: jax.Array | None = None,
+) -> DSBAState:
+    """One iteration of Algorithm 1 on every node simultaneously.
+
+    i_t: (N,) int array — the sample index drawn by each node this step
+    (passed in explicitly so the sparse-communication simulator can replay
+    the identical stream; see core/sparse_comm.py).
+
+    mix: optional (N, D) override of the neighbor-mixing term. The sparse-
+    communication runtime computes this from each node's *reconstructed*
+    delayed copies of the other iterates (Section 5.1) instead of the true
+    Z — everything else in the update is node-local.
+    """
+    spec, alpha, lam = cfg.spec, cfg.alpha, cfg.lam
+    n, q, k = data_idx.shape
+    t = spec.tail_dim
+    d = state.z.shape[1] - t
+    dt = state.z.dtype
+    rho = 1.0 / (1.0 + alpha * lam)
+    a_eff = rho * alpha
+    idx_s = _gather_rows(data_idx, i_t)  # (N, k)
+    val_s = _gather_rows(data_val, i_t)  # (N, k)
+    y_s = _gather_rows(data_y, i_t)  # (N,)
+    c_s = _gather_rows(state.table_g, i_t)  # (N,)
+    ct_s = _gather_rows(state.table_tail, i_t)  # (N, t)
+
+    is0 = state.step == 0
+
+    def add_sparse(vec, idxs, vals, coef, tail):
+        """vec (N, D) += coef * x (+) tail, batched over nodes."""
+
+        def one(v, ix, vl, c, tl):
+            v = v.at[ix].add(c * vl)
+            if t:
+                v = v.at[d:].add(tl)
+            return v
+
+        return jax.vmap(one)(vec, idxs, vals, coef, tail)
+
+    # ---- psi (eq. 29 generalized; eq. 31 at t = 0) -------------------------
+    scale = (q - 1.0) / q
+    mix_t = wt.astype(dt) @ (2.0 * state.z - state.z_prev) if mix is None else mix
+    mix_0 = w.astype(dt) @ state.z if mix is None else mix
+    psi_t = mix_t + alpha * lam * state.z
+    psi_t = add_sparse(
+        psi_t,
+        state.didx_prev,
+        state.dval_prev,
+        alpha * scale * state.dg_prev,
+        alpha * scale * state.dtail_prev,
+    )
+    psi_0 = mix_0 - alpha * state.phibar
+    psi = jnp.where(is0, psi_0, psi_t)
+    psi = add_sparse(psi, idx_s, val_s, alpha * c_s, alpha * ct_s)
+
+    gather_u = jax.vmap(lambda p, ix, vl: jnp.sum(vl * p[ix]))
+    xsq = jnp.sum(val_s * val_s, axis=-1)  # == 1 for normalized rows
+
+    if cfg.method == "dsba":
+        # backward step: z^{t+1} = J_{alpha B^lam_{n,i}}(psi)  (eq. 30)
+        s = gather_u(psi[:, :d], idx_s, val_s)
+        g_new, tail_z = jax.vmap(
+            lambda s_, pt_, y_, x_: spec.resolvent_coeff_and_tail(
+                rho * s_, rho * pt_, y_, a_eff, x_
+            )
+        )(s, psi[:, d:], y_s, xsq)
+        z_new = rho * psi
+        z_new = add_sparse(
+            z_new, idx_s, val_s, -a_eff * g_new, jnp.zeros((n, t), dt)
+        )
+        if t:
+            z_new = z_new.at[:, d:].set(tail_z)
+        # operator outputs at the NEW point (for delta + table, Alg.1 l.7-8)
+        u_new = rho * s - a_eff * g_new * xsq
+        g_upd, tail_upd = spec.coeff_and_tail(u_new, y_s, tail_z)
+    elif cfg.method == "dsa":
+        # forward step: delta at z^t (eq. 32); no resolvent.
+        #   z^{t+1} = psi - alpha*B_{n,i}(z^t) - alpha*lam*(2z^t - z^{t-1})
+        # (at t=0 the lam correction is z^0; psi_0 carries no lam term)
+        u_cur = gather_u(state.z[:, :d], idx_s, val_s)
+        g_upd, tail_upd = spec.coeff_and_tail(u_cur, y_s, state.z[:, d:])
+        # psi already contains +alpha*lam*z^t (t>=1); subtracting
+        # alpha*lam*(2z^t - z^{t-1}) nets the forward-reg difference
+        # -alpha*lam*(z^t - z^{t-1}). At t=0 psi has no lam term and the
+        # forward step subtracts alpha*lam*z^0 directly.
+        lam_pt = jnp.where(is0, state.z, 2.0 * state.z - state.z_prev)
+        z_new = psi - alpha * lam * lam_pt
+        z_new = add_sparse(z_new, idx_s, val_s, -alpha * g_upd, -alpha * tail_upd)
+    else:
+        raise ValueError(cfg.method)
+
+    # ---- delta, table, phibar updates --------------------------------------
+    dg = g_upd - c_s
+    dtail = tail_upd - ct_s
+    set_row = jax.vmap(lambda tb, i, v: tb.at[i].set(v))
+    table_g = set_row(state.table_g, i_t, g_upd)
+    table_tail = set_row(state.table_tail, i_t, tail_upd)
+    phibar = add_sparse(state.phibar, idx_s, val_s, dg / q, dtail / q)
+
+    return DSBAState(
+        z=z_new,
+        z_prev=state.z,
+        table_g=table_g,
+        table_tail=table_tail,
+        phibar=phibar,
+        dg_prev=dg,
+        didx_prev=idx_s,
+        dval_prev=val_s,
+        dtail_prev=dtail,
+        step=state.step + 1,
+    )
+
+
+def draw_indices(steps: int, n_nodes: int, q: int, seed: int = 0) -> np.ndarray:
+    """(steps, N) uniform sample indices — shared by dense and sparse runs."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, q, size=(steps, n_nodes)).astype(np.int32)
+
+
+@dataclasses.dataclass
+class RunResult:
+    state: DSBAState
+    iters: np.ndarray  # iteration counts at record points
+    dist2: np.ndarray  # mean_n ||z_n - z*||^2 (if z_star given)
+    consensus: np.ndarray  # mean_n ||z_n - zbar||^2
+    zs: np.ndarray | None  # optional snapshots (chunks, N, D)
+
+
+def run(
+    cfg: DSBAConfig,
+    data,
+    w: np.ndarray,
+    steps: int,
+    z0: np.ndarray | None = None,
+    z_star: np.ndarray | None = None,
+    record_every: int = 50,
+    seed: int = 0,
+    keep_snapshots: bool = False,
+    indices: np.ndarray | None = None,
+) -> RunResult:
+    """Run DSBA/DSA for `steps` iterations, recording metrics periodically.
+
+    indices: optional (steps, N) pre-drawn sample indices (replayable runs).
+    """
+    spec = cfg.spec
+    n = data.n_nodes
+    dtot = data.d + spec.tail_dim
+    dt = data.val.dtype
+    if z0 is None:
+        z0 = np.zeros((n, dtot), dtype=dt)
+    state = init_state(cfg, data, jnp.asarray(z0))
+
+    w_j = jnp.asarray(w, dtype=dt)
+    wt_j = jnp.asarray(w_tilde(w), dtype=dt)
+    idx_j = jnp.asarray(data.idx)
+    val_j = jnp.asarray(data.val)
+    y_j = jnp.asarray(data.y)
+
+    @jax.jit
+    def chunk(state, idx_block):
+        def body(st, i_t):
+            return dsba_step(cfg, w_j, wt_j, idx_j, val_j, y_j, st, i_t), None
+
+        st, _ = jax.lax.scan(body, state, idx_block)
+        return st
+
+    if indices is None:
+        indices = draw_indices(steps, n, data.q, seed)
+    indices = jnp.asarray(indices, jnp.int32)
+
+    zstar_j = None if z_star is None else jnp.asarray(z_star, dtype=dt)
+    iters, dist2, cons, zs = [], [], [], []
+    n_chunks = max(1, steps // record_every)
+    for c in range(n_chunks):
+        state = chunk(state, indices[c * record_every : (c + 1) * record_every])
+        z = state.z
+        zbar = z.mean(0, keepdims=True)
+        cons.append(float(jnp.mean(jnp.sum((z - zbar) ** 2, -1))))
+        if zstar_j is not None:
+            dist2.append(float(jnp.mean(jnp.sum((z - zstar_j[None]) ** 2, -1))))
+        iters.append((c + 1) * record_every)
+        if keep_snapshots:
+            zs.append(np.asarray(z))
+    return RunResult(
+        state=state,
+        iters=np.asarray(iters),
+        dist2=np.asarray(dist2) if dist2 else np.zeros(0),
+        consensus=np.asarray(cons),
+        zs=np.stack(zs) if zs else None,
+    )

@@ -1,0 +1,243 @@
+"""Monotone operators and their resolvents (paper Sections 3-5, 7, appendix 9.6-9.7).
+
+All operators here are *component* operators B_{n,i} built from one data
+sample with a linear predictor, so the operator output decomposes as
+
+    B(z) = g(u, y) * x  (+)  tail(u, z_tail)          u = x^T z_head
+
+where ``x`` is the (sparse) feature vector, ``g`` a scalar coefficient
+function, and ``tail`` a small dense tail (empty for ridge/logistic; the
+(a, b, theta) block for AUC maximization). This is what makes the paper's
+O(q) gradient-table storage (Schmidt et al. 2017) and the O(rho*d) sparse
+delta communication possible: the SAGA table stores *scalars*, and
+delta = (g_new - g_old) * x (+) tail difference has the sample's sparsity.
+
+l2 regularization (paper Section 7): B^lam = B + lam*I. The lam*I part is
+deterministic, so it is kept OUT of the SAGA table (which would otherwise
+densify delta) and handled exactly inside the resolvent via the paper's
+scaling trick:  J_{alpha B^lam}(psi) = J_{rho*alpha B}(rho*psi),
+rho = 1/(1 + lam*alpha).  See core/dsba.py for the corrected psi recursion.
+
+Resolvents:
+  ridge     closed form (Section 7.1)
+  logistic  1-D Newton, 20 iterations (appendix 9.6, eqs. 73-74)
+  auc       4x4 linear solve (appendix 9.7, eqs. 75-82)
+
+All rows are assumed normalized to ||x|| = 1 (the paper normalizes all
+datasets); `resolvent_*` take ``xsq = ||x||^2`` anyway for generality.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEWTON_ITERS = 20  # paper: "20 newton iteration is sufficient for DSBA"
+
+
+# ---------------------------------------------------------------------------
+# scalar coefficient functions g(u, y):  B(z) = g(x^T z, y) x
+# ---------------------------------------------------------------------------
+
+def ridge_coeff(u, y):
+    """B(z) = (x^T z - y) x."""
+    return u - y
+
+
+def logistic_coeff(u, y):
+    """B(z) = -y / (1 + exp(y * x^T z)) * x."""
+    return -y / (1.0 + jnp.exp(y * u))
+
+
+def logistic_coeff_prime(u, y):
+    e = logistic_coeff(u, y)
+    # de/du = -y*e - e^2   (verified against eq. 73's denominator)
+    return -y * e - e * e
+
+
+# ---------------------------------------------------------------------------
+# scalar resolvents: solve  u + a_eff * g(u, y) * xsq = s  for u = x^T z
+# at the resolvent point, and return g(u*, y).
+#
+# With regularization the caller passes a_eff = rho*alpha and s = rho*s_raw
+# (rho = 1/(1+lam*alpha)); the full resolvent is then
+#   z = rho*psi - rho*alpha*g(u*, y) * x.
+# ---------------------------------------------------------------------------
+
+def ridge_resolvent_coeff(s, y, a_eff, xsq):
+    u = (s + a_eff * y * xsq) / (1.0 + a_eff * xsq)
+    return ridge_coeff(u, y)
+
+
+def logistic_resolvent_coeff(s, y, a_eff, xsq):
+    """Newton iteration of eq. (73) generalized to ||x||^2 = xsq."""
+
+    def body(_, u):
+        e = logistic_coeff(u, y)
+        f = u + a_eff * xsq * e - s
+        fp = 1.0 + a_eff * xsq * logistic_coeff_prime(u, y)
+        return u - f / fp
+
+    u0 = jnp.zeros_like(s)
+    u = jax.lax.fori_loop(0, NEWTON_ITERS, body, u0)
+    return logistic_coeff(u, y)
+
+
+# ---------------------------------------------------------------------------
+# AUC maximization operators (appendix 9.7)
+#
+# z = [w (d); a; b; theta].  For one sample (x, y) with positive ratio p:
+#   positive (y=+1):
+#     B_w     = 2(1-p)((u - a) - (1+theta)) x
+#     B_a     = -2(1-p)(u - a)
+#     B_b     = 0
+#     B_theta = 2p(1-p)theta + 2(1-p)u            (= -df/dtheta)
+#   negative (y=-1):
+#     B_w     = 2p((u - b) + (1+theta)) x
+#     B_a     = 0
+#     B_b     = -2p(u - b)
+#     B_theta = 2p(1-p)theta - 2p u
+# where u = x^T w.
+# ---------------------------------------------------------------------------
+
+def auc_coeff_and_tail(u, y, tail, p):
+    """Returns (g, tail_out): B(z) = g*x (+) tail_out over (a, b, theta)."""
+    a, b, theta = tail[..., 0], tail[..., 1], tail[..., 2]
+    pos = y > 0
+    g_pos = 2.0 * (1.0 - p) * ((u - a) - (1.0 + theta))
+    g_neg = 2.0 * p * ((u - b) + (1.0 + theta))
+    g = jnp.where(pos, g_pos, g_neg)
+    ta = jnp.where(pos, -2.0 * (1.0 - p) * (u - a), 0.0)
+    tb = jnp.where(pos, 0.0, -2.0 * p * (u - b))
+    tt = 2.0 * p * (1.0 - p) * theta + jnp.where(
+        pos, 2.0 * (1.0 - p) * u, -2.0 * p * u
+    )
+    return g, jnp.stack([ta, tb, tt], axis=-1)
+
+
+def auc_resolvent(s, psi_tail, y, p, a_eff, xsq):
+    """Solve the 4x4 system (eqs. 77-82) generalized to ||x||^2 = xsq.
+
+    Solves  v + a_eff * B(v) = rhs  in the scalar coordinates
+    v = (u, a, b, theta) where u = x^T w,  rhs = (s, psi_a, psi_b, psi_th).
+    Returns (g, tail_solution): the full resolvent is
+      w  = psi_w - a_eff * g * x,   (a, b, theta) = tail_solution.
+    """
+    beta_p = (1.0 - p) * a_eff
+    beta_n = p * a_eff
+    pos = y > 0
+
+    def mat_pos():
+        return jnp.array(
+            [
+                [1.0 + 2.0 * beta_p * xsq, -2.0 * beta_p * xsq, 0.0, -2.0 * beta_p * xsq],
+                [-2.0 * beta_p, 1.0 + 2.0 * beta_p, 0.0, 0.0],
+                [0.0, 0.0, 1.0, 0.0],
+                [2.0 * beta_p, 0.0, 0.0, 1.0 + 2.0 * p * (1.0 - p) * a_eff],
+            ],
+            dtype=s.dtype,
+        )
+
+    def mat_neg():
+        return jnp.array(
+            [
+                [1.0 + 2.0 * beta_n * xsq, 0.0, -2.0 * beta_n * xsq, 2.0 * beta_n * xsq],
+                [0.0, 1.0, 0.0, 0.0],
+                [-2.0 * beta_n, 0.0, 1.0 + 2.0 * beta_n, 0.0],
+                [-2.0 * beta_n, 0.0, 0.0, 1.0 + 2.0 * p * (1.0 - p) * a_eff],
+            ],
+            dtype=s.dtype,
+        )
+
+    mat = jnp.where(pos, mat_pos(), mat_neg())
+    rhs0 = jnp.where(pos, s + 2.0 * beta_p * xsq, s - 2.0 * beta_n * xsq)
+    rhs = jnp.concatenate(
+        [rhs0[None], psi_tail.astype(s.dtype)], axis=0
+    )
+    sol = jnp.linalg.solve(mat, rhs)
+    u, tail = sol[0], sol[1:]
+    g, _ = auc_coeff_and_tail(u, y, tail, p)
+    return g, tail
+
+
+# ---------------------------------------------------------------------------
+# Operator spec: uniform interface used by DSBA / DSA / EXTRA / ...
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OperatorSpec:
+    """A family of component operators B_{n,i} with linear predictors.
+
+    tail_dim: number of trailing dense coordinates in z (0 or 3 for AUC).
+    p: positive-class ratio (AUC only).
+    """
+
+    kind: str  # 'ridge' | 'logistic' | 'auc'
+    p: float = 0.5
+
+    @property
+    def tail_dim(self) -> int:
+        return 3 if self.kind == "auc" else 0
+
+    def coeff_and_tail(self, u, y, tail):
+        """g and tail-output of B at predictor value u, tail coords `tail`."""
+        if self.kind == "ridge":
+            return ridge_coeff(u, y), jnp.zeros_like(tail)
+        if self.kind == "logistic":
+            return logistic_coeff(u, y), jnp.zeros_like(tail)
+        if self.kind == "auc":
+            return auc_coeff_and_tail(u, y, tail, self.p)
+        raise ValueError(self.kind)
+
+    def resolvent_coeff_and_tail(self, s, psi_tail, y, a_eff, xsq):
+        """Solve z + a_eff*B(z) = psi in scalar coordinates.
+
+        Returns (g_at_solution, tail_solution). The caller reconstructs
+        z_head = psi_head - a_eff * g * x and z_tail = tail_solution.
+        """
+        if self.kind == "ridge":
+            g = ridge_resolvent_coeff(s, y, a_eff, xsq)
+            return g, psi_tail
+        if self.kind == "logistic":
+            g = logistic_resolvent_coeff(s, y, a_eff, xsq)
+            return g, psi_tail
+        if self.kind == "auc":
+            return auc_resolvent(s, psi_tail, y, self.p, a_eff, xsq)
+        raise ValueError(self.kind)
+
+
+# ---------------------------------------------------------------------------
+# Dense full-operator evaluation (for baselines & reference solutions).
+# ---------------------------------------------------------------------------
+
+def full_operator_dense(spec: OperatorSpec, z, feats, labels, lam):
+    """Mean_i B^lam_{n,i}(z) for one node, dense features (q, d).
+
+    z: (d + tail_dim,). Returns same shape.
+    """
+    t = spec.tail_dim
+    d = feats.shape[-1]
+    head, tail = z[:d], z[d:]
+    u = feats @ head  # (q,)
+    tails = jnp.broadcast_to(tail, (feats.shape[0], t)) if t else jnp.zeros(
+        (feats.shape[0], 0), z.dtype
+    )
+    g, tail_out = spec.coeff_and_tail(u, labels, tails)
+    out_head = (g[:, None] * feats).mean(0)
+    out_tail = tail_out.mean(0) if t else jnp.zeros((0,), z.dtype)
+    return jnp.concatenate([out_head, out_tail]) + lam * z
+
+
+def sample_operator_sparse(spec: OperatorSpec, z, idx, val, y, lam=0.0):
+    """B_{n,i}(z) coefficient form for ONE sparse sample (no lam term).
+
+    idx/val: (k,) padded sparse row (pad idx with 0 and val with 0).
+    Returns (g, tail_out, u).
+    """
+    d = z.shape[0] - spec.tail_dim
+    u = jnp.sum(val * z[idx])
+    tail = z[d:]
+    g, tail_out = spec.coeff_and_tail(u, y, tail)
+    return g, tail_out, u

@@ -1,0 +1,103 @@
+"""Centralized reference solutions and objective values for the convex tasks.
+
+Used to measure suboptimality / distance-to-optimum in the paper-reproduction
+benchmarks. Solves the *global* problem: find z* with
+
+    (1/(N q)) sum_{n,i} B_{n,i}(z*) + lam z* = 0
+
+For ridge and AUC the mean operator is affine, so one Newton step (via an
+explicit jacobian) is exact; for logistic we run damped Newton to machine
+precision. Dense features only — reference problems use moderate d.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.operators import OperatorSpec
+
+
+def mean_operator(spec: OperatorSpec, data, lam: float):
+    """Returns F(z) = mean_{n,i} B_{n,i}(z) + lam z as a jnp function."""
+    feats = jnp.asarray(data.dense().reshape(-1, data.d))  # (Nq, d)
+    labels = jnp.asarray(data.y.reshape(-1))
+    t = spec.tail_dim
+
+    def F(z):
+        head, tail = z[: data.d], z[data.d :]
+        u = feats @ head
+        tails = jnp.broadcast_to(tail, (feats.shape[0], t))
+        g, tail_out = spec.coeff_and_tail(u, labels, tails)
+        out_head = feats.T @ g / feats.shape[0]
+        out = jnp.concatenate([out_head, tail_out.mean(0)]) if t else out_head
+        return out + lam * z
+
+    return F
+
+
+def solve_root(
+    spec: OperatorSpec, data, lam: float, iters: int = 50, tol: float = 1e-14
+) -> np.ndarray:
+    """Newton root-finder on the mean operator. Exact for affine operators."""
+    F = mean_operator(spec, data, lam)
+    D = data.d + spec.tail_dim
+    z = jnp.zeros((D,), dtype=jnp.asarray(data.val).dtype)
+    jac = jax.jacfwd(F)
+    for _ in range(iters):
+        r = F(z)
+        if float(jnp.linalg.norm(r)) < tol:
+            break
+        z = z - jnp.linalg.solve(jac(z), r)
+    return np.asarray(z)
+
+
+def objective(spec: OperatorSpec, data, lam: float):
+    """Primal objective f(z) (ridge/logistic) or saddle value terms (AUC).
+
+    For AUC we return the primal minimax objective F(w_bar, theta) of eq. (11)
+    evaluated at z = [w; a; b; theta] — used only for reporting.
+    """
+    feats = jnp.asarray(data.dense().reshape(-1, data.d))
+    labels = jnp.asarray(data.y.reshape(-1))
+    p = spec.p
+
+    def f(z):
+        head = z[: data.d]
+        u = feats @ head
+        if spec.kind == "ridge":
+            loss = 0.5 * jnp.mean((u - labels) ** 2)
+            return loss + 0.5 * lam * jnp.sum(z * z)
+        if spec.kind == "logistic":
+            loss = jnp.mean(jnp.log1p(jnp.exp(-labels * u)))
+            return loss + 0.5 * lam * jnp.sum(z * z)
+        if spec.kind == "auc":
+            a, b, th = z[data.d], z[data.d + 1], z[data.d + 2]
+            pos = labels > 0
+            val = (
+                -p * (1 - p) * th**2
+                + jnp.mean(
+                    jnp.where(pos, (1 - p) * (u - a) ** 2, p * (u - b) ** 2)
+                )
+                + jnp.mean(
+                    2
+                    * (1 + th)
+                    * jnp.where(pos, -(1 - p) * u, p * u)
+                )
+            )
+            return val + 0.5 * lam * jnp.sum(z * z)
+        raise ValueError(spec.kind)
+
+    return f
+
+
+def auc_score(w: np.ndarray, data) -> float:
+    """Exact pairwise AUC of linear scorer w on the pooled dataset."""
+    feats = data.dense().reshape(-1, data.d)
+    labels = data.y.reshape(-1)
+    scores = feats @ w
+    pos, neg = scores[labels > 0], scores[labels < 0]
+    if len(pos) == 0 or len(neg) == 0:
+        return float("nan")
+    diff = pos[:, None] - neg[None, :]
+    return float(((diff > 0).mean() + 0.5 * (diff == 0).mean()))

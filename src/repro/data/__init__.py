@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    SparseDataset,
+    make_classification,
+    make_regression,
+    DATASET_PRESETS,
+)

@@ -1,0 +1,1 @@
+from repro.ft.elastic import ElasticGossip, HeartbeatMonitor  # noqa: F401

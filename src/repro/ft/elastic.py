@@ -1,0 +1,120 @@
+"""Fault tolerance for decentralized pod-level training.
+
+A core practical advantage of the paper's setting: decentralized methods
+have NO global barrier, so pod failure degrades locally instead of stalling
+the fleet. This module provides the control-plane pieces (simulated
+single-process, as the compute plane is):
+
+  HeartbeatMonitor  failure detector: pods report heartbeats; a pod missing
+                    `timeout` ticks is declared dead.
+  ElasticGossip     elastic membership: on pod death/join, rebuild the
+                    mixing graph over the survivors and remap the gossip
+                    state (drop or seed the pod-replica rows). DSBA then
+                    simply continues on the new W — no global re-init.
+                    Straggler mitigation: bounded staleness — a late
+                    neighbor's contribution reuses its last delivered
+                    value for up to `max_staleness` rounds (Wu et al. 2016
+                    asynchrony, which the paper builds on).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mixing as MX
+from repro.core.gossip import GossipConfig
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_pods: int, timeout: int = 3):
+        self.timeout = timeout
+        self.last_seen = {p: 0 for p in range(n_pods)}
+        self.tick_now = 0
+
+    def heartbeat(self, pod: int):
+        self.last_seen[pod] = self.tick_now
+
+    def tick(self) -> list[int]:
+        """Advance time; returns list of pods declared DEAD this tick."""
+        self.tick_now += 1
+        return [
+            p for p, t in self.last_seen.items()
+            if self.tick_now - t >= self.timeout
+        ]
+
+    def remove(self, pod: int):
+        self.last_seen.pop(pod, None)
+
+    def add(self, pod: int):
+        self.last_seen[pod] = self.tick_now
+
+
+@dataclasses.dataclass
+class ElasticGossip:
+    """Membership + state remapping for the pod axis."""
+
+    gc: GossipConfig
+
+    def shrink(self, state: dict, dead: list[int]) -> tuple[dict, GossipConfig]:
+        """Drop dead pods' replica rows; rebuild mixing over survivors."""
+        n = self.gc.n_pods
+        keep = np.asarray([p for p in range(n) if p not in dead])
+        new_gc = dataclasses.replace(self.gc, n_pods=len(keep))
+
+        def slice_pod(x):
+            if hasattr(x, "shape") and x.ndim >= 1 and x.shape[0] == n:
+                return jnp.asarray(np.asarray(x)[keep])
+            return x
+
+        new_state = jax.tree_util.tree_map(slice_pod, state)
+        return new_state, new_gc
+
+    def grow(self, state: dict, n_new: int, seed_from: int = 0
+             ) -> tuple[dict, GossipConfig]:
+        """Join pods: seed new replicas from pod `seed_from` (consensus warm
+        start); DSBA's mixing pulls them into agreement."""
+        n = self.gc.n_pods
+        new_gc = dataclasses.replace(self.gc, n_pods=n + n_new)
+
+        def pad_pod(x):
+            if hasattr(x, "shape") and x.ndim >= 1 and x.shape[0] == n:
+                seed_rows = jnp.broadcast_to(
+                    x[seed_from][None], (n_new, *x.shape[1:])
+                )
+                return jnp.concatenate([x, seed_rows], axis=0)
+            return x
+
+        return jax.tree_util.tree_map(pad_pod, state), new_gc
+
+
+@dataclasses.dataclass
+class BoundedStalenessBuffer:
+    """Straggler mitigation: per-neighbor last-delivered values with ages.
+
+    get(neighbor) returns the freshest delivered value if it is at most
+    `max_staleness` rounds old; otherwise signals the caller to drop the
+    neighbor's term this round (weights renormalized by the caller).
+    """
+
+    max_staleness: int
+
+    def __post_init__(self):
+        self._buf: dict[int, tuple[int, object]] = {}
+        self._round = 0
+
+    def deliver(self, neighbor: int, value):
+        self._buf[neighbor] = (self._round, value)
+
+    def advance(self):
+        self._round += 1
+
+    def get(self, neighbor: int):
+        if neighbor not in self._buf:
+            return None
+        t, v = self._buf[neighbor]
+        if self._round - t > self.max_staleness:
+            return None
+        return v

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the paper's and substrate's compute hot-spots:
+#   flash_attention  GQA/causal/window/softcap online-softmax attention
+#   ssd_scan         Mamba2/SSD within-chunk compute (MXU blocking)
+#   sparse_saga      DSBA per-node sparse row update (one-hot-matmul
+#                    gather/scatter — the TPU adaptation, DESIGN.md §5)
+#   topk_compress    block-local top-k for gossip delta streams
+# Each kernel: <name>.py (pl.pallas_call + BlockSpec); ops.py has jit'd
+# wrappers with backend dispatch; ref.py the pure-jnp oracles
+# (tests/test_kernels.py sweeps shapes/dtypes in interpret mode).

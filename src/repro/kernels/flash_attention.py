@@ -1,0 +1,130 @@
+"""Pallas TPU flash attention (fwd): GQA + causal + sliding window + softcap.
+
+Blocked online-softmax attention — the S x S score matrix never
+materializes; the working set is one (block_q, head_dim) query tile plus
+streamed K/V tiles, sized for VMEM, with MXU-aligned (128-multiple) matmul
+dims. GQA is expressed in the BlockSpec index maps: the kv specs map query
+head h -> kv head h // group_size, so no K/V replication is staged.
+
+Layout: q (B, Hq, S, D), k/v (B, Hkv, S, D) — heads-major so a (S, D) tile
+per head streams contiguously from HBM.
+
+Validated against kernels/ref.py in interpret mode (tests/test_kernels.py);
+the bwd pass recomputes through the reference path (ops.flash_attention).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, *,
+    block_q: int, block_k: int, seq_k: int, causal: bool,
+    window: int | None, softcap: float | None, scale: float,
+):
+    """One (batch, q-head, q-block) program instance.
+
+    q_ref: (block_q, D); k_ref/v_ref: (seq_k, D); o_ref: (block_q, D).
+    """
+    q_blk = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (block_q, D)
+    D = q.shape[-1]
+    q_pos = q_blk * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    num_k_blocks = pl.cdiv(seq_k, block_k)
+
+    def body(i, carry):
+        acc, m_prev, l_prev = carry
+        # pl.load (not ref[...]): its OOB-read semantics on the ragged last
+        # block are well-defined here and masked below; the ref[] indexing
+        # path miscompiles the padded tail in interpret mode.
+        k_tile = pl.load(
+            k_ref, (0, 0, pl.dslice(i * block_k, block_k), slice(None))
+        ).astype(jnp.float32)
+        v_tile = pl.load(
+            v_ref, (0, 0, pl.dslice(i * block_k, block_k), slice(None))
+        ).astype(jnp.float32)
+        k_pos = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        valid = (k_pos < seq_k)[:, None]
+        k_tile = jnp.where(valid, k_tile, 0.0)  # OOB pad rows -> 0, not NaN
+        v_tile = jnp.where(valid, v_tile, 0.0)
+        s = q @ k_tile.T  # (block_q, block_k)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        mask &= (k_pos < seq_k)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_cur = jnp.maximum(m_prev, s.max(-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + p.sum(-1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return acc, m_cur, l_cur
+
+    acc0 = jnp.zeros((block_q, D), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+
+    if causal:
+        # only stream kv blocks that intersect the causal/window band
+        hi = jnp.minimum(
+            num_k_blocks, (q_blk + 1) * block_q // block_k + 1
+        )
+    else:
+        hi = num_k_blocks
+    lo = 0
+    if window is not None:
+        lo = jnp.maximum(0, (q_blk * block_q - window) // block_k)
+    acc, m, l = jax.lax.fori_loop(lo, hi, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, Sk)
+
+    grid = (B, Hq, pl.cdiv(S, block_q))
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, seq_k=Sk,
+        causal=causal, window=window, softcap=softcap, scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Sk, D), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, Sk, D), lambda b, h, i: (b, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

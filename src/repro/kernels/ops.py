@@ -1,0 +1,73 @@
+"""jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+use_pallas: 'auto' picks the Pallas kernel on TPU and the jnp reference on
+CPU (this container); 'interpret' forces the kernel body in interpret mode
+(how the tests validate the kernels here); 'off' is the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.sparse_saga import sparse_axpy, sparse_dot
+from repro.kernels.ssd_scan import ssd_chunk_fwd
+from repro.kernels.topk_compress import block_topk
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(use_pallas: str) -> str:
+    if use_pallas == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return {"on": "pallas", "interpret": "interpret", "off": "ref"}[use_pallas]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "use_pallas"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    use_pallas: str = "auto"):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return R.attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        interpret=(m == "interpret"),
+    )
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def ssd_chunk(xdt, cum, Bc, Cc, *, use_pallas: str = "auto"):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return R.ssd_chunk_ref(xdt, cum, Bc, Cc)
+    return ssd_chunk_fwd(xdt, cum, Bc, Cc, interpret=(m == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def saga_sparse_dot(psi, idx, val, *, use_pallas: str = "auto"):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return R.sparse_dot_ref(psi, idx, val)
+    return sparse_dot(psi, idx, val, interpret=(m == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def saga_sparse_axpy(psi, idx, val, coef, rho, *, use_pallas: str = "auto"):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return R.sparse_axpy_ref(psi, idx, val, coef, rho)
+    return sparse_axpy(psi, idx, val, coef, rho, interpret=(m == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("k", "use_pallas"))
+def topk_blocks(x, k: int, *, use_pallas: str = "auto"):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return R.block_topk_ref(x, k)
+    return block_topk(x, k, interpret=(m == "interpret"))

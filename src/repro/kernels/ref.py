@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, S, D).astype(jnp.float32) / math.sqrt(D)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(S)
+    kp = jnp.arange(Sk)
+    mask = jnp.ones((S, Sk), bool)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window is not None:
+        mask &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, S, D).astype(q.dtype)
+
+
+def ssd_chunk_ref(xdt, cum, Bc, Cc):
+    """Within-chunk SSD: (y_intra, chunk states). Shapes as ssd_chunk_fwd."""
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,nh)
+    Q = xdt.shape[2]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    scores = jnp.einsum("bcis,bcjs->bcij", Cc, Bc)
+    y = jnp.einsum("bcij,bcijh,bcjhd->bcihd", scores, decay, xdt)
+    dte = jnp.exp(cum[:, :, -1:, :] - cum)
+    st = jnp.einsum("bcjs,bcjh,bcjhd->bchsd", Bc, dte, xdt)
+    return y, st
+
+
+def sparse_dot_ref(psi, idx, val):
+    return jax.vmap(lambda p, i, v: jnp.sum(v * p[i]))(
+        psi.astype(jnp.float32), idx, val.astype(jnp.float32)
+    )
+
+
+def sparse_axpy_ref(psi, idx, val, coef, rho):
+    def one(p, i, v, c, r):
+        return (r * p).at[i].add(c * v)
+
+    return jax.vmap(one)(psi, idx, val, coef.astype(psi.dtype),
+                         rho.astype(psi.dtype))
+
+
+def block_topk_ref(x, k):
+    def one(row):
+        _, i = jax.lax.top_k(jnp.abs(row), k)
+        return row[i], i.astype(jnp.int32)
+
+    return jax.vmap(one)(x)

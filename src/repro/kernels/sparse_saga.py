@@ -1,0 +1,132 @@
+"""Pallas TPU kernels for the DSBA per-iteration sparse row update.
+
+The paper's per-node hot loop with linear predictors is:
+  (1) s   = x^T psi            sparse gather-dot   (nnz = k elements)
+  (2) g   = resolvent scalar   (O(1), stays in jnp)
+  (3) z   = rho psi - a g x    sparse AXPY          (k elements)
+
+GPUs do (1)/(3) with native gather/scatter; TPUs have no efficient VMEM
+gather, so the TPU-native adaptation processes the d-dimensional model row
+in VMEM blocks and expresses gather/scatter as ONE-HOT MATMULS against the
+in-block index match — turning irregular memory access into MXU contractions
+(DESIGN.md §5). Cost per node: O(k * d_block) per block, O(k * d) total —
+the same O(rho d) as the paper.
+
+Grid: (N nodes, d blocks). sparse_dot accumulates per-node partial dots via
+an output block revisited across the d grid axis; sparse_axpy is elementwise
+per block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dot_kernel(psi_ref, idx_ref, val_ref, out_ref, *, block_d: int, d: int):
+    """Accumulate sum(val * psi[idx]) for indices landing in this d-block."""
+    j = pl.program_id(1)
+    psi = psi_ref[0].astype(jnp.float32)  # (block_d,)
+    idx = idx_ref[0]  # (k,)
+    val = val_ref[0].astype(jnp.float32)  # (k,)
+    lo = j * block_d
+    # ragged last block: out-of-range pad columns read garbage/NaN -> zero
+    col = lo + jax.lax.iota(jnp.int32, block_d)
+    psi = jnp.where(col < d, psi, 0.0)
+    local = idx - lo
+    in_blk = (local >= 0) & (local < block_d)
+    # one-hot (k, block_d) match -> gather as a matvec on the MXU
+    onehot = (
+        local[:, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (1, block_d), 1)
+    ) & in_blk[:, None]
+    gathered = (onehot.astype(jnp.float32) @ psi[:, None])[:, 0]  # (k,)
+    partial = jnp.sum(val * gathered)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[0] = jnp.zeros_like(out_ref[0])
+
+    out_ref[0] += partial.astype(out_ref.dtype)
+
+
+def sparse_dot(
+    psi: jax.Array,  # (N, D)
+    idx: jax.Array,  # (N, k) int32
+    val: jax.Array,  # (N, k)
+    *,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-node sparse dot products: out[n] = sum_k val[n,k] * psi[n, idx[n,k]]."""
+    N, D = psi.shape
+    k = idx.shape[1]
+    block_d = min(block_d, D)
+    grid = (N, pl.cdiv(D, block_d))
+    kernel = functools.partial(_dot_kernel, block_d=block_d, d=D)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_d), lambda n, j: (n, j)),
+            pl.BlockSpec((1, k), lambda n, j: (n, 0)),
+            pl.BlockSpec((1, k), lambda n, j: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda n, j: (n,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(psi, idx.astype(jnp.int32), val)
+
+
+def _axpy_kernel(psi_ref, idx_ref, val_ref, coef_ref, rho_ref, out_ref, *,
+                 block_d: int):
+    """out_block = rho * psi_block + coef * scatter(val at idx) in-block."""
+    j = pl.program_id(1)
+    psi = psi_ref[0].astype(jnp.float32)
+    idx = idx_ref[0]
+    val = val_ref[0].astype(jnp.float32)
+    coef = coef_ref[0].astype(jnp.float32)
+    rho = rho_ref[0].astype(jnp.float32)
+    lo = j * block_d
+    local = idx - lo
+    in_blk = (local >= 0) & (local < block_d)
+    onehot = (
+        local[:, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (1, block_d), 1)
+    ) & in_blk[:, None]
+    scat = (val[None, :] @ onehot.astype(jnp.float32))[0]  # (block_d,)
+    out_ref[0] = (rho * psi + coef * scat).astype(out_ref.dtype)
+
+
+def sparse_axpy(
+    psi: jax.Array,  # (N, D)
+    idx: jax.Array,  # (N, k)
+    val: jax.Array,  # (N, k)
+    coef: jax.Array,  # (N,)   e.g. -a_eff * g_n
+    rho: jax.Array,  # (N,)   e.g. 1/(1+alpha lam)
+    *,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[n] = rho[n] * psi[n] + coef[n] * x_n (sparse row scatter)."""
+    N, D = psi.shape
+    k = idx.shape[1]
+    block_d = min(block_d, D)
+    grid = (N, pl.cdiv(D, block_d))
+    kernel = functools.partial(_axpy_kernel, block_d=block_d)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_d), lambda n, j: (n, j)),
+            pl.BlockSpec((1, k), lambda n, j: (n, 0)),
+            pl.BlockSpec((1, k), lambda n, j: (n, 0)),
+            pl.BlockSpec((1,), lambda n, j: (n,)),
+            pl.BlockSpec((1,), lambda n, j: (n,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda n, j: (n, j)),
+        out_shape=jax.ShapeDtypeStruct((N, D), psi.dtype),
+        interpret=interpret,
+    )(psi, idx.astype(jnp.int32), val, coef, rho)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel for the Mamba2/SSD WITHIN-CHUNK computation.
+
+The chunked SSD algorithm (models/ssm.py) splits into:
+  (a) within-chunk: y_intra = ((C B^T) .* L) (x dt)  and the per-chunk state
+      contribution  S_c = B^T (decay-to-end .* x dt)  — all dense matmuls
+      over (Q, ds, hd) tiles -> MXU work. THIS kernel.
+  (b) across-chunk: a length-nc linear recurrence + rank-1 read-out —
+      negligible FLOPs, kept in jnp (lax.scan).
+
+This split is the TPU-native adaptation of the paper's GPU kernel: the
+within-chunk part is blocked to VMEM with (Q x Q) decay tiles built on the
+VPU and contracted on the MXU.
+
+Grid: (batch, n_chunks, head_blocks). Per-instance working set:
+  xdt (Q, hb, hd), cum (Q, hb), B/C (Q, ds), out y (Q, hb, hd),
+  states (hb, ds, hd)  — for Q=128, hb=4, hd=64, ds=128: ~0.5 MB. VMEM-safe.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(xdt_ref, cum_ref, b_ref, c_ref, y_ref, st_ref, *,
+                      head_block: int):
+    """One (batch, chunk, head-block) instance.
+
+    xdt_ref: (1, 1, Q, hb, hd)   x * dt, fp32
+    cum_ref: (1, 1, Q, hb)       inclusive cumsum of log-decay
+    b_ref:   (1, 1, Q, ds)
+    c_ref:   (1, 1, Q, ds)
+    y_ref:   (1, 1, Q, hb, hd)   intra-chunk output
+    st_ref:  (1, 1, hb, ds, hd)  chunk state contribution
+    """
+    xdt = xdt_ref[0, 0].astype(jnp.float32)  # (Q, hb, hd)
+    cum = cum_ref[0, 0].astype(jnp.float32)  # (Q, hb)
+    Bm = b_ref[0, 0].astype(jnp.float32)  # (Q, ds)
+    Cm = c_ref[0, 0].astype(jnp.float32)  # (Q, ds)
+    Q = xdt.shape[0]
+
+    scores = Cm @ Bm.T  # (Q, Q) shared across heads in the block
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    )
+
+    for h in range(head_block):  # static unroll over the head block
+        ch = cum[:, h]
+        decay = jnp.exp(ch[:, None] - ch[None, :])
+        L = jnp.where(tri, decay, 0.0)
+        y_h = (scores * L) @ xdt[:, h, :]  # (Q, hd)
+        y_ref[0, 0, :, h, :] = y_h.astype(y_ref.dtype)
+        dte = jnp.exp(ch[-1] - ch)  # decay to end of chunk
+        st_h = (Bm * dte[:, None]).T @ xdt[:, h, :]  # (ds, hd)
+        st_ref[0, 0, h] = st_h.astype(st_ref.dtype)
+
+
+def ssd_chunk_fwd(
+    xdt: jax.Array,  # (B, nc, Q, nh, hd) fp32
+    cum: jax.Array,  # (B, nc, Q, nh)
+    Bc: jax.Array,  # (B, nc, Q, ds)
+    Cc: jax.Array,  # (B, nc, Q, ds)
+    *,
+    head_block: int = 4,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y_intra (B,nc,Q,nh,hd), states (B,nc,nh,ds,hd))."""
+    B, nc, Q, nh, hd = xdt.shape
+    ds = Bc.shape[-1]
+    head_block = min(head_block, nh)
+    assert nh % head_block == 0
+    hb_count = nh // head_block
+
+    kernel = functools.partial(_ssd_chunk_kernel, head_block=head_block)
+    grid = (B, nc, hb_count)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, head_block, hd),
+                         lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, head_block), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, ds), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, ds), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, head_block, hd),
+                         lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, head_block, ds, hd),
+                         lambda b, c, h: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, nh, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, nh, ds, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, cum, Bc, Cc)
+    return y, st

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. Single pod = 16x16 = 256 chips ('data', 'model'); multi-pod adds the
+'pod' axis (2 pods = 512 chips) — the decentralized-learning graph axis of
+the paper (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    if len(jax.devices()) == n:
+        return jax.make_mesh(shape, axes)
+    # host-device dry-run: 512 placeholder devices back both meshes
+    return jax.make_mesh(shape, axes, devices=np.asarray(jax.devices()[:n]))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many host devices a test configured."""
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=np.asarray(jax.devices()[:n]))

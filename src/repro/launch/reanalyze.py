@@ -1,0 +1,75 @@
+"""Recompute roofline terms from saved HLO dumps (no recompilation).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze [--dir experiments/dryrun]
+
+The dry-run saves each cell's optimized HLO as <cell>.hlo.zst; whenever
+hlo_analysis improves, this refreshes every JSON in place.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import zstandard
+
+from repro.configs import get_config
+from repro.launch import hlo_analysis as H
+from repro.launch.shapes import SHAPES
+
+DRY = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def reanalyze(path: pathlib.Path) -> bool:
+    hlo_path = path.with_suffix(".hlo.zst")
+    if not hlo_path.exists():
+        return False
+    rec = json.loads(path.read_text())
+    if not rec.get("ok"):
+        return False
+    text = zstandard.ZstdDecompressor().decompress(
+        hlo_path.read_bytes()
+    ).decode()
+    pc = H.program_costs(text)
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    mf = H.model_flops(cfg, shape.kind, shape.batch, shape.seq)
+    colls = H.CollectiveStats(dict(pc.coll_bytes_by_op),
+                              dict(pc.coll_count_by_op))
+    rl = H.roofline_terms(
+        {"flops": pc.flops, "bytes accessed": pc.bytes}, colls,
+        rec["chips"], mf,
+    )
+    rec.update(
+        hlo_flops=rl.hlo_flops,
+        hlo_bytes=rl.hlo_bytes,
+        collective_bytes=rl.collective_bytes,
+        collectives={"bytes": colls.bytes_by_op, "count": colls.count_by_op},
+        model_flops=mf,
+        roofline={
+            "compute_s": rl.compute_s,
+            "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s,
+            "dominant": rl.dominant,
+            "useful_flop_ratio": rl.useful_flop_ratio,
+            "roofline_fraction": rl.roofline_fraction,
+        },
+    )
+    path.write_text(json.dumps(rec, indent=2, default=str))
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(DRY))
+    args = ap.parse_args()
+    n = 0
+    for p in sorted(pathlib.Path(args.dir).glob("*.json")):
+        if reanalyze(p):
+            n += 1
+            print(f"reanalyzed {p.name}")
+    print(f"{n} records refreshed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""The assigned input-shape grid and per-(arch x shape) input specs.
+
+Every cell provides ShapeDtypeStruct stand-ins (weak-type-correct, shardable,
+ZERO device allocation) for the function the dry-run lowers:
+
+  train_4k     train_step   tokens/targets (256, 4096)
+  prefill_32k  serve prefill — decode_step over the full (32, 32768) prompt
+  decode_32k   serve decode — ONE new token, KV/SSM cache of 32768 (batch 128)
+  long_500k    decode with 524288-token cache (batch 1) — sub-quadratic archs
+
+decode/long lower `serve_step`, NOT train_step. long_500k runs only for
+archs with supports_long_context (mamba2, zamba2) — see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def cells_for(cfg: ModelConfig) -> list[str]:
+    names = ["train_4k", "prefill_32k"]
+    if cfg.has_decoder:
+        names.append("decode_32k")
+        if cfg.supports_long_context:
+            names.append("long_500k")
+    return names
+
+
+def _div(n: int, axes_sizes: list[int]) -> bool:
+    p = 1
+    for a in axes_sizes:
+        p *= a
+    return n % p == 0
+
+
+def batch_axes_for(batch: int, mesh) -> tuple[str, ...]:
+    """Largest prefix of (pod, data) that divides the batch."""
+    names = [n for n in ("pod", "data") if n in mesh.axis_names]
+    sizes = [mesh.shape[n] for n in names]
+    while names and not _div(batch, sizes):
+        names.pop()
+        sizes.pop()
+    return tuple(names)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Returns (args_sds, in_shardings_for_args) for the lowered function,
+    EXCLUDING the state/params argument (see dryrun.build_cell)."""
+    baxes = batch_axes_for(shape.batch, mesh)
+    bspec = P(baxes if baxes else None)
+
+    if shape.kind == "train":
+        sds = {
+            "tokens": jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32),
+        }
+        spec = {"tokens": P(*bspec, None), "targets": P(*bspec, None)}
+        if cfg.family == "encdec":
+            sds["enc_embeds"] = jax.ShapeDtypeStruct(
+                (shape.batch, cfg.encoder_len, cfg.d_model), cfg.compute_dtype
+            )
+            spec["enc_embeds"] = P(*bspec, None, None)
+        return sds, spec
+
+    if shape.kind == "prefill":
+        tok = jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32)
+        cache = T.cache_defs(cfg, shape.batch, shape.seq)
+        return (
+            {"tokens": tok, "cache": cache},
+            {"tokens": P(*bspec, None),
+             "cache": cache_specs(cfg, shape, mesh)},
+        )
+
+    # decode: one new token against a cache of length seq
+    tok = jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32)
+    cache = T.cache_defs(cfg, shape.batch, shape.seq)
+    return (
+        {"tokens": tok, "cache": cache},
+        {"tokens": P(*bspec, None), "cache": cache_specs(cfg, shape, mesh)},
+    )
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict:
+    """Cache shardings. Batch over ('pod','data') when divisible; otherwise
+    (long_500k batch=1) shard the cache LENGTH over those axes instead."""
+    baxes = batch_axes_for(shape.batch, mesh)
+    shard_len = not baxes  # batch unshardable -> spread the 500k cache
+    laxes = (
+        tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+        if shard_len
+        else None
+    )
+    b = P(*( (None,) + ((baxes,) if baxes else (None,)) ))
+    kvspec = lambda: {
+        "k": P(None, baxes if baxes else None, laxes, "model", None),
+        "v": P(None, baxes if baxes else None, laxes, "model", None),
+        "pos": P(),
+    }
+    ssm_spec = {
+        "state": P(None, baxes if baxes else None, "model", None, None),
+        "conv": P(None, baxes if baxes else None, None, "model"),
+    }
+    if cfg.family in ("dense", "moe"):
+        return kvspec()
+    if cfg.family == "ssm":
+        return ssm_spec
+    if cfg.family == "hybrid":
+        return {"ssm": ssm_spec, "attn": kvspec()}
+    if cfg.family == "encdec":
+        return {
+            "self": kvspec(),
+            "cross": {
+                "k": P(None, baxes if baxes else None, None, "model", None),
+                "v": P(None, baxes if baxes else None, None, "model", None),
+            },
+        }
+    raise ValueError(cfg.family)

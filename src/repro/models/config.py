@@ -1,0 +1,167 @@
+"""Model configuration covering all assigned architecture families.
+
+One frozen dataclass drives dense / MoE / SSM / hybrid / enc-dec / VLM
+backbones. Family semantics:
+
+  dense    decoder-only transformer (minitron, qwen2, llama3, chameleon,
+           gemma2 via local/global options)
+  moe      dense attention + routed-expert FFN (kimi-k2, qwen2-moe)
+  ssm      pure Mamba2/SSD stack, attention-free (mamba2)
+  hybrid   Mamba2 backbone + shared attention block every `hybrid_period`
+           layers (zamba2)
+  encdec   encoder-decoder with stubbed modality frontend (whisper)
+
+Modality frontends ([audio]/[vlm]) are STUBS per the assignment: input_specs
+provide precomputed frame embeddings (whisper) or fused token ids over the
+unified vocab (chameleon).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention options ---------------------------------------------
+    qkv_bias: bool = False  # qwen2
+    rope_theta: float = 10_000.0
+    sliding_window: int | None = None  # gemma2 local layers
+    local_global: bool = False  # gemma2: alternate local/global layers
+    attn_softcap: float | None = None  # gemma2: 50.0
+    final_softcap: float | None = None  # gemma2: 30.0
+
+    # --- MoE options ------------------------------------------------------
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    shared_expert_d_ff: int = 0  # 0 = no shared expert
+    capacity_factor: float = 1.25
+    # 0 = scatter/gather dispatch (simple; XLA reshards it badly at scale).
+    # >0 = GShard-style grouped one-hot EINSUM dispatch with this many token
+    # groups (set = data-shard count): dispatch becomes (G,Tg,E,C) one-hot
+    # contractions that are data/model-local by construction — trades
+    # ~2x MoE flops for eliminating the dispatch collectives (§Perf).
+    moe_groups: int = 0
+
+    # --- SSM (Mamba2/SSD) options ------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    # >0: scan SSD within-chunk compute over head blocks of this size,
+    # keeping the (Q x Q) decay tile per-block instead of materializing the
+    # full (B, nc, Q, Q, nh) tensor — the jnp twin of the Pallas kernel's
+    # grid blocking (§Perf lever for SSM training memory).
+    ssm_head_block: int = 0
+
+    # --- hybrid (zamba2) ----------------------------------------------------
+    hybrid_period: int = 6  # shared attention block every k ssm layers
+
+    # --- enc-dec (whisper) ----------------------------------------------------
+    n_encoder_layers: int = 0
+    encoder_len: int = 1500  # post-conv audio frames (frontend stubbed)
+
+    # --- numerics / misc -----------------------------------------------------
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    # remat policy for the scanned blocks: 'none'|'full'|'dots_saveable'
+    remat: str = "full"
+    # perf options (EXPERIMENTS.md §Perf; defaults = naive baseline)
+    blockwise_attention: bool = False  # online-softmax, no S x S buffer
+    attention_block_k: int = 1024
+    # shard attention compute by Q heads (n_heads) instead of KV heads:
+    # GQA models with kv_heads < mesh 'model' size otherwise replicate the
+    # whole attention computation across the model axis. Expands K/V per
+    # group (the expansion is itself sharded, so per-device KV bytes are
+    # unchanged) and removes the n_heads/kv_heads-fold compute redundancy.
+    shard_q_heads: bool = False
+    # shard the residual stream's d_model axis over 'model' (sequence-
+    # parallel style): divides the per-layer saved activations (the remat
+    # boundary carries) by the model-axis size, at the cost of per-layer
+    # all-gathers. The lever for 100B+ training memory.
+    shard_residual_embed: bool = False
+
+    # --- shape-grid participation -------------------------------------------
+    supports_long_context: bool = False  # run long_500k only if sub-quadratic
+    has_decoder: bool = True  # decode shapes apply
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND model-flops accounting)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        dense_mlp = 3 * d * ff
+        moe_mlp = self.n_experts * 3 * d * self.moe_d_ff + (
+            3 * d * self.shared_expert_d_ff if self.shared_expert_d_ff else 0
+        ) + d * self.n_experts  # router
+        di, st, hd = self.ssm_d_inner, self.ssm_state, self.ssm_head_dim
+        nh = self.ssm_heads if self.ssm_d_inner else 0
+        ssm_blk = (
+            d * (2 * di + 2 * st + nh)  # in_proj -> z, x, B, C, dt
+            + (di + 2 * st) * self.ssm_conv_width  # conv
+            + nh * 2  # A_log, D
+            + di * d  # out_proj
+        )
+        per = {
+            "dense": attn + dense_mlp,
+            "moe": attn + moe_mlp,
+            "ssm": ssm_blk,
+            "hybrid": ssm_blk,  # + shared attn block counted once below
+            "encdec": attn + dense_mlp,
+        }[self.family]
+        total = emb + self.n_layers * per
+        if self.family == "hybrid":
+            total += attn + dense_mlp  # one shared attention+mlp block
+        if self.family == "encdec":
+            # encoder layers + decoder cross-attention
+            total += self.n_encoder_layers * (attn + dense_mlp)
+            total += self.n_layers * attn  # cross-attn per decoder layer
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: routed top-k + shared only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        act_mlp = self.experts_per_token * 3 * d * self.moe_d_ff + (
+            3 * d * self.shared_expert_d_ff if self.shared_expert_d_ff else 0
+        ) + d * self.n_experts
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return int(emb + self.n_layers * (attn + act_mlp))

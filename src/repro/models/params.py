@@ -1,0 +1,131 @@
+"""Parameter definitions with logical sharding axes (single source of truth).
+
+Each model declares a nested dict of ParamDef(shape, logical axes). From the
+same tree we derive:
+  * materialized params            (smoke tests, examples — small configs)
+  * jax.ShapeDtypeStruct stand-ins (dry-run — no allocation, 405B+ safe)
+  * PartitionSpecs via LOGICAL_RULES (FSDP over 'data', TP/EP over 'model',
+    decentralized replicas over 'pod' — see train/sharding notes)
+
+Logical axis vocabulary:
+  vocab      embedding rows / LM head cols          -> 'model'
+  embed      the d_model axis of weight matrices    -> 'data'  (ZeRO-3/FSDP)
+  heads      attention query heads                  -> 'model'
+  kv_heads   attention kv heads                     -> 'model'
+  mlp        feed-forward hidden                    -> 'model'
+  expert     MoE expert index                       -> 'model' (EP)
+  ssm_inner  mamba inner channels                   -> 'model'
+  layers     scanned layer stack                    -> None (replicated axis)
+  + None for small axes (head_dim, state, conv taps, biases...)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+LOGICAL_RULES: dict[str, str | None] = {
+    "vocab": "model",
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert": "model",
+    "ssm_inner": "model",
+    "layers": None,
+    None: None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None  # stddev; default 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def pspec(self, rules=None) -> P:
+        rules = rules or LOGICAL_RULES
+        return P(*(rules.get(a) for a in self.axes))
+
+    def sds(self, dtype) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, dtype)
+
+    def materialize(self, key, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        scale = self.scale if self.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (scale * jax.random.normal(key, self.shape)).astype(dtype)
+
+
+def tree_pspecs(defs, rules=None):
+    return jax.tree_util.tree_map(
+        lambda d: d.pspec(rules), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def tree_sds(defs, dtype):
+    return jax.tree_util.tree_map(
+        lambda d: d.sds(dtype), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def tree_materialize(defs, key, dtype):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.materialize(k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def shardable_pspecs(spec_tree, sds_tree, mesh):
+    """Drop mesh axes that do not evenly divide the corresponding dim.
+
+    Small models on big meshes (gemma2: 4 kv heads on a 16-wide 'model'
+    axis; whisper: vocab 51865) simply leave those dims unsharded.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def axis_size(ax) -> int:
+        if isinstance(ax, (tuple, list)):
+            n = 1
+            for a in ax:
+                n *= mesh.shape[a]
+            return n
+        return mesh.shape[ax]
+
+    def fix(spec, sds):
+        if spec is None:
+            return spec
+        entries = list(spec) + [None] * (len(sds.shape) - len(spec))
+        out = []
+        for dim, ax in zip(sds.shape, entries):
+            if ax is None:
+                out.append(None)
+            elif dim % axis_size(ax) == 0:
+                out.append(ax)
+            else:
+                out.append(None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(fix, spec_tree, sds_tree)
+
+
+def tree_num_params(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    return sum(math.prod(d.shape) for d in leaves)

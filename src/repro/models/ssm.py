@@ -1,0 +1,249 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) blocks.
+
+Training/prefill uses the chunked SSD algorithm: within-chunk computation is
+a masked attention-like matmul (MXU-friendly — this is the TPU-native
+adaptation of the paper's GPU kernel), across-chunk state is a short scan.
+Decode is the O(1) recurrent update on a (B, nh, dstate, headdim) state.
+
+ngroups = 1 (B and C shared across heads), scalar decay A per head — the
+standard Mamba2 configuration.
+
+kernels/ssd_scan.py implements the within-chunk compute as a Pallas kernel;
+this file is the pure-jnp reference used on CPU and by kernel tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+from repro.models.layers import rms_norm_def, rms_norm, shard_act
+
+
+def ssm_defs(cfg: ModelConfig) -> dict:
+    d, din, ds = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    nh, w = cfg.ssm_heads, cfg.ssm_conv_width
+    return {
+        "wz": ParamDef((d, din), ("embed", "ssm_inner")),
+        "wx": ParamDef((d, din), ("embed", "ssm_inner")),
+        "wB": ParamDef((d, ds), ("embed", None)),
+        "wC": ParamDef((d, ds), ("embed", None)),
+        "wdt": ParamDef((d, nh), ("embed", None)),
+        "dt_bias": ParamDef((nh,), (None,), init="zeros"),
+        "A_log": ParamDef((nh,), (None,), init="ones"),
+        "D": ParamDef((nh,), (None,), init="ones"),
+        "conv_x": ParamDef((w, din), (None, "ssm_inner"), scale=0.5),
+        "conv_B": ParamDef((w, ds), (None, None), scale=0.5),
+        "conv_C": ParamDef((w, ds), (None, None), scale=0.5),
+        "norm": rms_norm_def(din),
+        "wo": ParamDef((din, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, S, C), w: (W, C) -> causal depthwise conv, silu activation."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, k : k + x.shape[1], :] * w[k] for k in range(W))
+    return jax.nn.silu(out)
+
+
+def _depthwise_conv_valid(x: jax.Array, w: jax.Array) -> jax.Array:
+    """No-padding depthwise conv: (B, S, C), (W, C) -> (B, S-W+1, C), silu."""
+    W = w.shape[0]
+    S_out = x.shape[1] - W + 1
+    out = sum(x[:, k : k + S_out, :] * w[k] for k in range(W))
+    return jax.nn.silu(out)
+
+
+def _ssd_chunked(xh, dt, a_log, Bc, Cc, chunk, h0=None, head_block=0):
+    """Chunked SSD scan.
+
+    xh: (B, S, nh, hd)  inputs per head
+    dt: (B, S, nh)      step sizes (post-softplus)
+    a_log: (B, S, nh)   per-step log-decay (dt * A, A < 0)
+    Bc, Cc: (B, S, ds)  input/output projections (shared across heads)
+    h0: optional initial state (B, nh, ds, hd)
+    head_block: >0 streams the within-chunk compute over head blocks so the
+      (i, j) decay tile is (B, nc, Q, Q, head_block) instead of
+      (B, nc, Q, Q, nh) — an nh/head_block-fold cut of the dominant buffer.
+    Returns y: (B, S, nh, hd), final_state: (B, nh, ds, hd)
+    """
+    if head_block and head_block < xh.shape[2]:
+        nh = xh.shape[2]
+        assert nh % head_block == 0, (nh, head_block)
+        nb = nh // head_block
+        r = lambda t: jnp.moveaxis(
+            t.reshape(*t.shape[:-1], nb, head_block)
+            if t.ndim == 3 else
+            t.reshape(t.shape[0], t.shape[1], nb, head_block, t.shape[3]),
+            2, 0,
+        )
+        xh_b, dt_b, al_b = r(xh), r(dt), r(a_log)
+        h0_b = (
+            None if h0 is None
+            else jnp.moveaxis(
+                h0.reshape(h0.shape[0], nb, head_block, *h0.shape[2:]), 1, 0
+            )
+        )
+
+        def one(args):
+            xh_i, dt_i, al_i, h0_i = args
+            return _ssd_chunked(xh_i, dt_i, al_i, Bc, Cc, chunk,
+                                h0=h0_i, head_block=0)
+
+        ys, hs = jax.lax.map(
+            one,
+            (xh_b, dt_b, al_b,
+             h0_b if h0_b is not None else jnp.zeros(
+                 (nb, xh.shape[0], head_block, Bc.shape[-1], xh.shape[3]),
+                 jnp.promote_types(xh.dtype, jnp.float32),
+             )),
+        )
+        y = jnp.moveaxis(ys, 0, 2).reshape(*xh.shape[:2], nh, xh.shape[3])
+        h = jnp.moveaxis(hs, 0, 1).reshape(xh.shape[0], nh, Bc.shape[-1],
+                                           xh.shape[3])
+        return y, h
+    Bsz, S_in, nh, hd = xh.shape
+    ds = Bc.shape[-1]
+    Q = min(chunk, S_in)
+    pad = (-S_in) % Q
+    if pad:
+        # zero-pad: dt=0 => decay 1 and contribution 0, so state is exact
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xh, dt, a_log, Bc, Cc = map(zp, (xh, dt, a_log, Bc, Cc))
+    S = S_in + pad
+    nc = S // Q
+
+    # at least fp32 internal state; preserves f64 when the caller uses it
+    f32 = jnp.promote_types(xh.dtype, jnp.float32)
+    xdt = (xh * dt[..., None]).astype(f32)
+    r = lambda t, shape: t.reshape(shape)
+    xdt = r(xdt, (Bsz, nc, Q, nh, hd))
+    al = r(a_log.astype(f32), (Bsz, nc, Q, nh))
+    Bc_ = r(Bc.astype(f32), (Bsz, nc, Q, ds))
+    Cc_ = r(Cc.astype(f32), (Bsz, nc, Q, ds))
+
+    cum = jnp.cumsum(al, axis=2)  # (B, nc, Q, nh) inclusive
+    # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xdt_j
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,nh)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    scores = jnp.einsum("bcis,bcjs->bcij", Cc_, Bc_)  # (B, nc, i, j)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhd->bcihd", scores, decay, xdt)
+
+    # chunk states: state_c = sum_j exp(cum_last - cum_j) B_j (x) xdt_j
+    dte = jnp.exp(cum[:, :, -1:, :] - cum)  # (B, nc, Q, nh)
+    states = jnp.einsum("bcjs,bcjh,bcjhd->bchsd", Bc_, dte, xdt)  # (B,nc,nh,ds,hd)
+
+    # inter-chunk recurrence
+    total = jnp.exp(cum[:, :, -1, :])  # (B, nc, nh)
+
+    def scan_fn(h, inp):
+        tot_c, st_c = inp
+        h_new = tot_c[:, :, None, None] * h + st_c
+        return h_new, h  # emit PREVIOUS state (pre-chunk)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, ds, hd), f32)
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn,
+        h0.astype(f32),
+        (jnp.moveaxis(total, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B, nc, nh, ds, hd)
+
+    y_inter = jnp.einsum("bcis,bchsd->bcihd", Cc_, h_prevs) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, S, nh, hd)[:, :S_in]
+    return y, h_final
+
+
+def ssm_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # (B, S, d_model)
+    *,
+    cache: dict | None = None,  # decode: {'state': (B,nh,ds,hd), 'conv': (B,W-1,C)}
+) -> tuple[jax.Array, dict | None]:
+    dt_c = cfg.compute_dtype
+    B, S, _ = x.shape
+    din, ds, nh, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    W = cfg.ssm_conv_width
+    xc = x.astype(dt_c)
+
+    z = xc @ p["wz"].astype(dt_c)  # gate
+    xi = xc @ p["wx"].astype(dt_c)
+    Bc = xc @ p["wB"].astype(dt_c)
+    Cc = xc @ p["wC"].astype(dt_c)
+    dt_raw = xc @ p["wdt"].astype(dt_c)
+    xi = shard_act(xi, "batch", "seq", "mlp")
+
+    conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)  # (B, S, din+2ds)
+    conv_w = jnp.concatenate(
+        [p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1
+    ).astype(dt_c)
+
+    new_cache = None
+    if cache is None:
+        conv_out = _causal_depthwise_conv(conv_in, conv_w)
+    else:
+        # prepend the conv history window (works for prefill S>1 and decode S=1)
+        conv_full = jnp.concatenate([cache["conv"], conv_in], axis=1)
+        conv_out = _depthwise_conv_valid(conv_full, conv_w)  # (B, S, C)
+        new_conv = conv_full[:, -(W - 1):]
+
+    xi, Bc, Cc = (
+        conv_out[..., :din],
+        conv_out[..., din : din + ds],
+        conv_out[..., din + ds :],
+    )
+    xh = xi.reshape(B, S, nh, hd)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (nh,) negative
+    a_log = dt * A[None, None, :]
+
+    if cache is None:
+        y, _ = _ssd_chunked(xh, dt, a_log, Bc, Cc, cfg.ssm_chunk,
+                            head_block=cfg.ssm_head_block)
+    elif S == 1:
+        # recurrent step: h = exp(dt A) h + B (x) (dt x);  y = C.h
+        h = cache["state"].astype(jnp.float32)  # (B, nh, ds, hd)
+        xdt = (xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None])
+        h = jnp.exp(a_log[:, 0])[:, :, None, None] * h + jnp.einsum(
+            "bs,bhd->bhsd", Bc[:, 0].astype(jnp.float32), xdt
+        )
+        y = jnp.einsum("bs,bhsd->bhd", Cc[:, 0].astype(jnp.float32), h)[:, None]
+        new_cache = {"state": h.astype(jnp.float32), "conv": new_conv}
+    else:
+        # prefill with cache: chunked scan from the cached state
+        y, h_final = _ssd_chunked(
+            xh, dt, a_log, Bc, Cc, cfg.ssm_chunk, h0=cache["state"],
+            head_block=cfg.ssm_head_block,
+        )
+        new_cache = {"state": h_final.astype(jnp.float32), "conv": new_conv}
+
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, din).astype(dt_c)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)  # gated norm
+    out = y @ p["wo"].astype(dt_c)
+    return shard_act(out, "batch", "seq", "embed"), new_cache
+
+
+def ssm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    """Decode-cache shapes for ONE ssm block."""
+    din, ds = cfg.ssm_d_inner, cfg.ssm_state
+    C = din + 2 * ds
+    return {
+        "state": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_heads, ds, cfg.ssm_head_dim), jnp.float32
+        ),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv_width - 1, C), cfg.compute_dtype),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> dict:
+    sds = ssm_cache_defs(cfg, batch)
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), sds)

@@ -1,0 +1,529 @@
+"""Model assembly for every assigned architecture family.
+
+Families:
+  dense / moe / ssm : homogeneous stacks -> jax.lax.scan over stacked layer
+                      params (compile-time O(1) in depth; required for the
+                      126-layer / 1T-param dry-runs). gemma2's alternating
+                      local/global attention is handled by a per-layer window
+                      array threaded through the scan.
+  hybrid (zamba2)   : python-unrolled Mamba2 stack with a SHARED attention
+                      block (one set of weights, applied every
+                      cfg.hybrid_period layers).
+  encdec (whisper)  : bidirectional encoder over stubbed frame embeddings +
+                      causal decoder with cross-attention.
+
+Public API:
+  model_defs(cfg)                      -> ParamDef tree
+  forward(cfg, params, batch)          -> logits            (train / scoring)
+  cache_defs(cfg, batch, max_len)      -> decode-cache ShapeDtypeStructs
+  prefill(cfg, params, batch, cache)   -> (cache, last_logits)
+  decode_step(cfg, params, tok, cache) -> (cache, logits)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+# ---------------------------------------------------------------------------
+# param defs
+# ---------------------------------------------------------------------------
+
+def _stack(defs: dict, n: int) -> dict:
+    """Prepend a scanned 'layers' axis to every ParamDef leaf."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n, *d.shape), ("layers", *d.axes), d.init, d.scale),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def _block_defs(cfg: ModelConfig) -> dict:
+    blk = {
+        "ln1": L.rms_norm_def(cfg.d_model),
+        "attn": L.attention_defs(cfg),
+        "ln2": L.rms_norm_def(cfg.d_model),
+    }
+    blk["moe" if cfg.family == "moe" else "mlp"] = (
+        L.moe_defs(cfg) if cfg.family == "moe" else L.mlp_defs(cfg)
+    )
+    return blk
+
+
+def _ssm_block_defs(cfg: ModelConfig) -> dict:
+    return {"ln": L.rms_norm_def(cfg.d_model), "ssm": S.ssm_defs(cfg)}
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    defs: dict[str, Any] = {
+        "embed": ParamDef((cfg.vocab_size, d), ("vocab", "embed"), scale=1.0),
+        "final_norm": L.rms_norm_def(d),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, cfg.vocab_size), ("embed", "vocab"))
+
+    if cfg.family in ("dense", "moe"):
+        defs["blocks"] = _stack(_block_defs(cfg), cfg.n_layers)
+    elif cfg.family == "ssm":
+        defs["blocks"] = _stack(_ssm_block_defs(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        defs["blocks"] = _stack(_ssm_block_defs(cfg), cfg.n_layers)
+        shared = _block_defs(cfg)
+        defs["shared_attn"] = shared  # one attention+mlp block, reused
+    elif cfg.family == "encdec":
+        enc_blk = {
+            "ln1": L.rms_norm_def(d),
+            "attn": L.attention_defs(cfg),
+            "ln2": L.rms_norm_def(d),
+            "mlp": L.mlp_defs(cfg),
+        }
+        dec_blk = {
+            "ln1": L.rms_norm_def(d),
+            "attn": L.attention_defs(cfg),
+            "ln_x": L.rms_norm_def(d),
+            "xattn": L.attention_defs(cfg, cross=True),
+            "ln2": L.rms_norm_def(d),
+            "mlp": L.mlp_defs(cfg),
+        }
+        defs["encoder"] = _stack(enc_blk, cfg.n_encoder_layers)
+        defs["decoder"] = _stack(dec_blk, cfg.n_layers)
+        defs["enc_final_norm"] = L.rms_norm_def(d)
+    else:
+        raise ValueError(cfg.family)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _window_schedule(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer sliding window; -1 = global. gemma2: odd layers global."""
+    if cfg.local_global and cfg.sliding_window:
+        w = [cfg.sliding_window if i % 2 == 0 else -1 for i in range(cfg.n_layers)]
+    elif cfg.sliding_window:
+        w = [cfg.sliding_window] * cfg.n_layers
+    else:
+        w = [-1] * cfg.n_layers
+    return jnp.asarray(w, jnp.int32)
+
+
+def _embed(cfg: ModelConfig, params, tokens=None, inputs_embeds=None):
+    if inputs_embeds is not None:
+        return inputs_embeds.astype(cfg.compute_dtype)
+    x = params["embed"][tokens]  # (B, S, d)
+    return (x * jnp.asarray(cfg.d_model**0.5, x.dtype)).astype(cfg.compute_dtype)
+
+
+def _unembed(cfg: ModelConfig, params, x):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(cfg.compute_dtype)
+    logits = (x @ head).astype(jnp.float32)
+    logits = L.softcap(logits, cfg.final_softcap)
+    return L.shard_act(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# dense / moe / ssm stacks (scanned)
+# ---------------------------------------------------------------------------
+
+def _dense_block(cfg: ModelConfig, p, x, positions, window, cache):
+    h, new_cache = L.multi_head_attention(
+        cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+        causal=True, window=None, cache=cache, _traced_window=window,
+    )
+    x = x + h
+    inner = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + L.moe(cfg, p["moe"], inner)
+    else:
+        x = x + L.mlp(cfg, p["mlp"], inner)
+    return x, new_cache
+
+
+def _ssm_layer(cfg: ModelConfig, p, x, cache):
+    h, new_cache = S.ssm_block(
+        cfg, p["ssm"], L.rms_norm(x, p["ln"], cfg.norm_eps), cache=cache
+    )
+    return x + h, new_cache
+
+
+def _scan_stack(cfg, blocks, x, positions, windows, caches):
+    """Scan over stacked layer params (+ per-layer window + optional cache).
+
+    caches['pos'] is a scalar shared by all layers, so it rides in the
+    closure; only the stacked k/v tensors are scanned.
+    """
+    has_cache = caches is not None
+    pos = caches["pos"] if has_cache else None
+
+    def body(carry, xs):
+        x = carry
+        if has_cache:
+            p, w, k, v = xs
+            x, new_c = _dense_block(
+                cfg, p, x, positions, w, {"k": k, "v": v, "pos": pos}
+            )
+            return x, (new_c["k"], new_c["v"])
+        p, w = xs
+        x, _ = _dense_block(cfg, p, x, positions, w, None)
+        return x, None
+
+    body = _remat(cfg, body)
+    if has_cache:
+        xs = (blocks, windows, caches["k"], caches["v"])
+        x, (nk, nv) = jax.lax.scan(body, x, xs)
+        return x, {"k": nk, "v": nv, "pos": pos + positions.shape[1]}
+    x, _ = jax.lax.scan(body, x, (blocks, windows))
+    return x, None
+
+
+def _scan_ssm_stack(cfg, blocks, x, caches):
+    has_cache = caches is not None
+
+    def body(carry, xs):
+        x = carry
+        if has_cache:
+            p, c = xs
+            x, new_c = _ssm_layer(cfg, p, x, c)
+            return x, new_c
+        (p,) = xs
+        x, _ = _ssm_layer(cfg, p, x, None)
+        return x, None
+
+    body = _remat(cfg, body)
+    xs = (blocks, caches) if has_cache else (blocks,)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# forward (train / scoring): full-sequence logits
+# ---------------------------------------------------------------------------
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array | None = None,  # (B, S) int32
+    *,
+    inputs_embeds: jax.Array | None = None,  # (B, S, d) modality stub
+    enc_embeds: jax.Array | None = None,  # (B, S_enc, d) whisper frames
+) -> jax.Array:
+    if cfg.family == "encdec":
+        return _forward_encdec(cfg, params, tokens, enc_embeds)
+
+    B, Seq = (tokens.shape if tokens is not None else inputs_embeds.shape[:2])
+    x = _embed(cfg, params, tokens, inputs_embeds)
+    x = L.shard_act(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(Seq)[None], (B, Seq))
+
+    if cfg.family in ("dense", "moe"):
+        windows = _window_schedule(cfg)
+        x, _ = _scan_stack(cfg, params["blocks"], x, positions, windows, None)
+    elif cfg.family == "ssm":
+        x, _ = _scan_ssm_stack(cfg, params["blocks"], x, None)
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(cfg, params, x, positions, caches=None)[0]
+    else:
+        raise ValueError(cfg.family)
+    return _unembed(cfg, params, x)
+
+
+def _hybrid_forward(cfg, params, x, positions, caches):
+    """zamba2: mamba stack with the shared attention block interleaved."""
+    blocks = params["blocks"]
+    new_ssm_caches, new_attn_caches = [], []
+    ai = 0
+    block_fn = _remat(cfg, lambda p, x, c: _ssm_layer(cfg, p, x, c))
+    for i in range(cfg.n_layers):
+        p_i = jax.tree_util.tree_map(lambda a: a[i], blocks)
+        c_i = None if caches is None else jax.tree_util.tree_map(
+            lambda a: a[i], caches["ssm"]
+        )
+        x, nc = block_fn(p_i, x, c_i)
+        if caches is not None:
+            new_ssm_caches.append(nc)
+        if (i + 1) % cfg.hybrid_period == 0:
+            ca = None if caches is None else {
+                "k": caches["attn"]["k"][ai],
+                "v": caches["attn"]["v"][ai],
+                "pos": caches["attn"]["pos"],
+            }
+            x, nca = _dense_block(
+                cfg, params["shared_attn"], x, positions,
+                jnp.asarray(-1, jnp.int32), ca,
+            )
+            if caches is not None:
+                new_attn_caches.append(nca)
+            ai += 1
+    if caches is None:
+        return x, None
+    stack = lambda xs: jax.tree_util.tree_map(lambda *a: jnp.stack(a), *xs)
+    new_caches = {
+        "ssm": stack(new_ssm_caches),
+        "attn": {
+            "k": jnp.stack([c["k"] for c in new_attn_caches]),
+            "v": jnp.stack([c["v"] for c in new_attn_caches]),
+            "pos": new_attn_caches[0]["pos"],
+        },
+    }
+    return x, new_caches
+
+
+def _forward_encdec(cfg, params, tokens, enc_embeds):
+    enc = _encode(cfg, params, enc_embeds)
+    B, Sd = tokens.shape
+    x = _embed(cfg, params, tokens)
+    positions = jnp.broadcast_to(jnp.arange(Sd)[None], (B, Sd))
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(enc.shape[1])[None], (B, enc.shape[1])
+    )
+
+    def body(carry, p):
+        x = carry
+        h, _ = L.multi_head_attention(
+            cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+            causal=True,
+        )
+        x = x + h
+        h, _ = L.multi_head_attention(
+            cfg, p["xattn"], L.rms_norm(x, p["ln_x"], cfg.norm_eps), positions,
+            kv_x=enc, kv_positions=enc_pos, causal=False, use_rope=False,
+        )
+        x = x + h
+        x = x + L.mlp(cfg, p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(cfg, body), x, params["decoder"])
+    return _unembed(cfg, params, x)
+
+
+def _encode(cfg, params, enc_embeds):
+    x = enc_embeds.astype(cfg.compute_dtype)
+    B, Se, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+
+    def body(carry, p):
+        x = carry
+        h, _ = L.multi_head_attention(
+            cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+            causal=False,
+        )
+        x = x + h
+        x = x + L.mlp(cfg, p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(cfg, body), x, params["encoder"])
+    return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decode: cache defs + prefill + single-token step
+# ---------------------------------------------------------------------------
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """ShapeDtypeStruct tree for the decode cache (dry-run friendly)."""
+    kv = lambda n: {
+        "k": jax.ShapeDtypeStruct(
+            (n, batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.compute_dtype
+        ),
+        "v": jax.ShapeDtypeStruct(
+            (n, batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.compute_dtype
+        ),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.family in ("dense", "moe"):
+        return kv(cfg.n_layers)
+    if cfg.family == "ssm":
+        one = S.ssm_cache_defs(cfg, batch)
+        return {
+            k: jax.ShapeDtypeStruct((cfg.n_layers, *v.shape), v.dtype)
+            for k, v in one.items()
+        }
+    if cfg.family == "hybrid":
+        one = S.ssm_cache_defs(cfg, batch)
+        n_attn = cfg.n_layers // cfg.hybrid_period
+        return {
+            "ssm": {
+                k: jax.ShapeDtypeStruct((cfg.n_layers, *v.shape), v.dtype)
+                for k, v in one.items()
+            },
+            "attn": kv(n_attn),
+        }
+    if cfg.family == "encdec":
+        return {
+            "self": kv(cfg.n_layers),
+            "cross": {
+                "k": jax.ShapeDtypeStruct(
+                    (cfg.n_layers, batch, cfg.encoder_len, cfg.n_kv_heads,
+                     cfg.head_dim), cfg.compute_dtype
+                ),
+                "v": jax.ShapeDtypeStruct(
+                    (cfg.n_layers, batch, cfg.encoder_len, cfg.n_kv_heads,
+                     cfg.head_dim), cfg.compute_dtype
+                ),
+            },
+        }
+    raise ValueError(cfg.family)
+
+
+def cache_pspecs(cfg: ModelConfig) -> dict:
+    """PartitionSpecs matching cache_defs: shard batch over 'data', kv heads
+    over 'model' (ssm states: heads over 'model')."""
+    from jax.sharding import PartitionSpec as P
+
+    kvp = lambda: {
+        "k": P(None, "data", None, "model", None),
+        "v": P(None, "data", None, "model", None),
+        "pos": P(),
+    }
+    if cfg.family in ("dense", "moe"):
+        return kvp()
+    if cfg.family == "ssm":
+        return {
+            "state": P(None, "data", "model", None, None),
+            "conv": P(None, "data", None, "model"),
+        }
+    if cfg.family == "hybrid":
+        return {
+            "ssm": {
+                "state": P(None, "data", "model", None, None),
+                "conv": P(None, "data", None, "model"),
+            },
+            "attn": kvp(),
+        }
+    if cfg.family == "encdec":
+        return {
+            "self": kvp(),
+            "cross": {
+                "k": P(None, "data", None, "model", None),
+                "v": P(None, "data", None, "model", None),
+            },
+        }
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_defs(cfg, batch, max_len)
+    )
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # (B, S_step) — S_step = 1 for decode, S for prefill
+    cache: dict,
+    *,
+    enc_embeds: jax.Array | None = None,
+) -> tuple[dict, jax.Array]:
+    """Process tokens at positions cache['pos']..+S, return updated cache +
+    logits for the last position."""
+    if cfg.family == "encdec":
+        return _decode_encdec(cfg, params, tokens, cache, enc_embeds)
+
+    B, Sq = tokens.shape
+    x = _embed(cfg, params, tokens)
+    pos0 = _cache_pos(cfg, cache)
+    positions = pos0 + jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+
+    if cfg.family in ("dense", "moe"):
+        windows = _window_schedule(cfg)
+        x, new_cache = _scan_stack(
+            cfg, params["blocks"], x, positions, windows, cache
+        )
+    elif cfg.family == "ssm":
+        x, new_cache = _scan_ssm_stack(cfg, params["blocks"], x, cache)
+    elif cfg.family == "hybrid":
+        x, new_cache = _hybrid_forward(cfg, params, x, positions, caches=cache)
+    else:
+        raise ValueError(cfg.family)
+    logits = _unembed(cfg, params, x[:, -1:])
+    return new_cache, logits[:, 0]
+
+
+def _cache_pos(cfg, cache):
+    if cfg.family in ("dense", "moe"):
+        return cache["pos"]
+    if cfg.family == "ssm":
+        return 0  # ssm caches carry no position (state is summary)
+    if cfg.family == "hybrid":
+        return cache["attn"]["pos"]
+    raise ValueError(cfg.family)
+
+
+def _decode_encdec(cfg, params, tokens, cache, enc_embeds):
+    B, Sq = tokens.shape
+    x = _embed(cfg, params, tokens)
+    pos0 = cache["self"]["pos"]
+    positions = pos0 + jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(cfg.encoder_len)[None], (B, cfg.encoder_len)
+    )
+
+    def body(carry, xs):
+        x = carry
+        p, ck, cv, xk, xv = xs
+        h, nc = L.multi_head_attention(
+            cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+            causal=True, cache={"k": ck, "v": cv, "pos": pos0},
+        )
+        x = x + h
+        h, _ = L.multi_head_attention(
+            cfg, p["xattn"], L.rms_norm(x, p["ln_x"], cfg.norm_eps), positions,
+            kv_x=jnp.zeros((B, 1, cfg.d_model), x.dtype),  # unused; cached K/V
+            kv_positions=enc_pos, causal=False, use_rope=False,
+            cache={"k": xk, "v": xv, "pos": jnp.int32(0)},
+        )
+        x = x + h
+        x = x + L.mlp(cfg, p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, (nc["k"], nc["v"])
+
+    xs = (
+        params["decoder"],
+        cache["self"]["k"], cache["self"]["v"],
+        cache["cross"]["k"], cache["cross"]["v"],
+    )
+    x, (nk, nv) = jax.lax.scan(_remat(cfg, body), x, xs)
+    new_cache = {
+        "self": {"k": nk, "v": nv, "pos": pos0 + Sq},
+        "cross": cache["cross"],
+    }
+    logits = _unembed(cfg, params, x[:, -1:])
+    return new_cache, logits[:, 0]
+
+
+def encode_cross_cache(cfg, params, enc_embeds, batch) -> dict:
+    """Whisper: run the encoder once, precompute per-layer cross K/V."""
+    enc = _encode(cfg, params, enc_embeds)
+    dt = cfg.compute_dtype
+
+    def body(_, p):
+        k = jnp.einsum("bsd,dhq->bshq", enc, p["xattn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhq->bshq", enc, p["xattn"]["wv"].astype(dt))
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["decoder"])
+    return {"k": ks, "v": vs}

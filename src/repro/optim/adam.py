@@ -1,0 +1,85 @@
+"""AdamW (+ SGD-momentum) with configurable state dtype.
+
+State is a pytree mirroring params (ZeRO-3: states inherit the parameters'
+shardings, so FSDP over 'data' automatically shards optimizer state).
+Global-norm clipping and decoupled weight decay included; learning-rate
+schedule is a plain callable step -> lr.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32  # bf16 for the 405B/1T configs
+    kind: str = "adamw"  # adamw | sgdm
+    warmup_steps: int = 100
+
+    def lr_at(self, step):
+        warm = jnp.minimum(1.0, (step + 1) / max(1, self.warmup_steps))
+        return self.lr * warm
+
+
+def adam_init(cfg: AdamConfig, params):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    if cfg.kind == "sgdm":
+        return {"mu": jax.tree_util.tree_map(zeros, params)}
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def adam_update(cfg: AdamConfig, params, grads, opt_state, step):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+    lr = cfg.lr_at(step)
+
+    def upd(p, g, mu, nu=None):
+        g = g.astype(jnp.float32) * scale
+        mu32 = mu.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g
+        if cfg.kind == "sgdm":
+            delta = mu32
+        else:
+            nu32 = nu.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * g * g
+            mu_hat = mu32 / (1 - cfg.b1 ** (step + 1))
+            nu_hat = nu32 / (1 - cfg.b2 ** (step + 1))
+            delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (delta + cfg.weight_decay * p32)
+        out = [p_new.astype(p.dtype), mu32.astype(mu.dtype)]
+        if cfg.kind != "sgdm":
+            out.append(nu32.astype(nu.dtype))
+        return tuple(out)
+
+    if cfg.kind == "sgdm":
+        pairs = jax.tree_util.tree_map(upd, params, grads, opt_state["mu"])
+        new_p = jax.tree_util.tree_map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree_util.tree_map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mu": new_mu}, {"grad_norm": gnorm, "lr": lr}
+
+    triples = jax.tree_util.tree_map(
+        upd, params, grads, opt_state["mu"], opt_state["nu"]
+    )
+    is_t = lambda x: isinstance(x, tuple)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], triples, is_leaf=is_t)
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], triples, is_leaf=is_t)
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], triples, is_leaf=is_t)
+    return new_p, {"mu": new_mu, "nu": new_nu}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,6 @@
+from repro.train.step import (  # noqa: F401
+    TrainConfig,
+    ce_loss,
+    make_train_state_defs,
+    train_step,
+)

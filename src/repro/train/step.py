@@ -1,0 +1,153 @@
+"""Training step: CE loss, grad-accumulation microbatching, AdamW, sharding.
+
+The single-pod step is a plain pjit program: FSDP (params/opt-state over
+'data') x TP (heads/mlp/experts/vocab over 'model'), batch over 'data'.
+The multi-pod decentralized step lives in core/gossip.py and reuses
+`local_grads` / `apply_updates` from here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.params import tree_pspecs, tree_sds
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamConfig = AdamConfig()
+    microbatches: int = 1  # gradient accumulation steps per train_step
+    batch_axes: tuple[str, ...] = ("data",)  # ('pod','data') for sync multipod
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def ce_loss(logits: jax.Array, targets: jax.Array, mask=None) -> jax.Array:
+    """Token-mean cross-entropy in fp32. logits (B,S,V), targets (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jax.Array:
+    logits = T.forward(
+        cfg, params, batch["tokens"], enc_embeds=batch.get("enc_embeds")
+    )
+    return ce_loss(logits, batch["targets"], batch.get("mask"))
+
+
+def local_grads(cfg: ModelConfig, tc: TrainConfig, params, batch):
+    """(loss, grads) with optional microbatch accumulation via lax.scan."""
+    if tc.microbatches <= 1:
+        return jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+
+    mb = tc.microbatches
+    split = jax.tree_util.tree_map(
+        lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:]), batch
+    )
+
+    def body(acc, mbatch):
+        l, g = jax.value_and_grad(lambda p: loss_fn(cfg, p, mbatch))(params)
+        acc_l, acc_g = acc
+        return (acc_l + l / mb,
+                jax.tree_util.tree_map(lambda a, b: a + b / mb, acc_g, g)), None
+
+    zero_g = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zero_g),
+                                    split)
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# state defs + step
+# ---------------------------------------------------------------------------
+
+def make_train_state_defs(cfg: ModelConfig, tc: TrainConfig):
+    """(sds_tree, pspec_tree) for {'params', 'opt', 'step'} — dry-run ready."""
+    defs = T.model_defs(cfg)
+    p_sds = tree_sds(defs, cfg.param_dtype)
+    p_spec = tree_pspecs(defs)
+    st_dt = tc.optimizer.state_dtype
+    o_sds = {"mu": tree_sds(defs, st_dt)}
+    o_spec = {"mu": p_spec}
+    if tc.optimizer.kind != "sgdm":
+        o_sds["nu"] = tree_sds(defs, st_dt)
+        o_spec["nu"] = p_spec
+    sds = {"params": p_sds, "opt": o_sds,
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    spec = {"params": p_spec, "opt": o_spec, "step": P()}
+    return sds, spec
+
+
+def init_train_state(cfg: ModelConfig, tc: TrainConfig, key):
+    from repro.models.params import tree_materialize
+
+    defs = T.model_defs(cfg)
+    params = tree_materialize(defs, key, cfg.param_dtype)
+    return {
+        "params": params,
+        "opt": adam_init(tc.optimizer, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def train_step(cfg: ModelConfig, tc: TrainConfig, state, batch):
+    """One optimizer step. Returns (new_state, metrics)."""
+    loss, grads = local_grads(cfg, tc, state["params"], batch)
+    params, opt, metrics = adam_update(
+        tc.optimizer, state["params"], grads, state["opt"], state["step"]
+    )
+    metrics["loss"] = loss
+    new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+    return new_state, metrics
+
+
+def batch_specs(cfg: ModelConfig, tc: TrainConfig) -> dict:
+    b = P(tc.batch_axes)
+    spec = {"tokens": b, "targets": b}
+    if cfg.family == "encdec":
+        spec["enc_embeds"] = P(tc.batch_axes, None, None)
+    return spec
+
+
+def batch_sds(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    out = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        out["enc_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_len, cfg.d_model), cfg.compute_dtype
+        )
+    return out
+
+
+def make_jitted_train_step(mesh, cfg: ModelConfig, tc: TrainConfig):
+    """jit with explicit in/out shardings on `mesh` (lower()-ready)."""
+    _, spec = make_train_state_defs(cfg, tc)
+    st_sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec)
+    b_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), batch_specs(cfg, tc)
+    )
+    return jax.jit(
+        lambda state, batch: train_step(cfg, tc, state, batch),
+        in_shardings=(st_sh, b_sh),
+        out_shardings=(st_sh, None),
+        donate_argnums=(0,),
+    )

@@ -1,0 +1,5 @@
+import jax
+
+# Convex-optimization tests need f64 to verify linear convergence to 1e-10+.
+# Model/kernel tests run in f32/bf16 explicitly.
+jax.config.update("jax_enable_x64", True)

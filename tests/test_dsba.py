@@ -1,0 +1,138 @@
+"""End-to-end convergence of DSBA (Algorithm 1) and Remark 5.1 degeneracies."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mixing, reference
+from repro.core.dsba import DSBAConfig, run
+from repro.core.operators import OperatorSpec
+from repro.data.synthetic import make_classification, make_regression
+
+
+def _setup(task="ridge", n_nodes=6, q=20, d=30, seed=0, positive_ratio=0.3,
+           lam=None):
+    if task == "ridge":
+        data = make_regression(n_nodes, q, d, k=6, seed=seed)
+        spec = OperatorSpec("ridge")
+    elif task == "logistic":
+        data = make_classification(n_nodes, q, d, k=6, seed=seed)
+        spec = OperatorSpec("logistic")
+    else:
+        data = make_classification(
+            n_nodes, q, d, k=6, positive_ratio=positive_ratio, seed=seed
+        )
+        spec = OperatorSpec("auc", p=data.positive_ratio())
+    if lam is None:
+        lam = 1.0 / (10.0 * data.total)  # paper: lambda = 1/(10 Q)
+    graph = mixing.erdos_renyi_graph(n_nodes, 0.4, seed=1)
+    w = mixing.laplacian_mixing(graph)
+    z_star = reference.solve_root(spec, data, lam)
+    return data, spec, lam, w, z_star
+
+
+# backward (resolvent) steps stay stable at large alpha — a DSBA selling point
+ALPHAS = {"ridge": 0.5, "logistic": 4.0, "auc": 1.0}
+
+
+@pytest.mark.parametrize("task", ["ridge", "logistic", "auc"])
+def test_dsba_converges_to_centralized_root(task):
+    data, spec, lam, w, z_star = _setup(task)
+    cfg = DSBAConfig(spec=spec, alpha=ALPHAS[task], lam=lam)
+    res = run(cfg, data, w, steps=4000, z_star=z_star, record_every=200)
+    assert res.dist2[-1] < 1e-12, f"{task}: dist2={res.dist2[-1]:.3e}"
+    assert res.consensus[-1] < 1e-12
+
+
+def test_dsba_linear_convergence_rate():
+    """dist^2 should decay geometrically: check log-linear slope."""
+    data, spec, lam, w, z_star = _setup("ridge")
+    cfg = DSBAConfig(spec=spec, alpha=0.5, lam=lam)
+    res = run(cfg, data, w, steps=3000, z_star=z_star, record_every=100)
+    logs = np.log10(np.maximum(res.dist2, 1e-300))
+    # strictly decreasing after warmup and large total drop
+    assert logs[-1] < logs[2] - 6.0
+    drops = np.diff(logs[2:])
+    assert (drops < 0.2).all()  # monotone-ish decay
+
+
+def test_dsa_recovered_and_converges():
+    """Remark 5.1: forward-delta variant is DSA; both converge to the same
+    root, DSBA at least as fast at its (larger stable) step size."""
+    data, spec, lam, w, z_star = _setup("ridge")
+    steps = 6000
+    res_b = run(DSBAConfig(spec, alpha=0.5, lam=lam), data, w, steps, z_star=z_star)
+    res_a = run(
+        DSBAConfig(spec, alpha=0.2, lam=lam, method="dsa"),
+        data, w, steps, z_star=z_star,
+    )
+    assert res_b.dist2[-1] < 1e-16
+    assert res_a.dist2[-1] < 1e-10  # DSA converges too (smaller stable alpha)
+    assert res_b.dist2[-1] <= res_a.dist2[-1]
+
+
+def test_single_node_dsba_is_point_saga():
+    """N=1: no mixing; DSBA == Point-SAGA (Defazio 2016) — converges to the
+    local regularized root."""
+    data = make_regression(n_nodes=1, q=40, d=20, k=5, seed=3)
+    spec = OperatorSpec("ridge")
+    lam = 1e-3
+    z_star = reference.solve_root(spec, data, lam)
+    w = np.ones((1, 1))
+    cfg = DSBAConfig(spec, alpha=1.0, lam=lam)
+    res = run(cfg, data, w, steps=3000, z_star=z_star, record_every=100)
+    assert res.dist2[-1] < 1e-14
+
+
+def test_dsba_iterates_satisfy_resolvent_identity():
+    """Internal consistency: every update solves
+    (1+alpha*lam) z_new + alpha B_{n,i}(z_new) = psi, so the table coeff at
+    the sampled index must equal g(x^T z_new)."""
+    data, spec, lam, w, z_star = _setup("ridge", n_nodes=3, q=5, d=10)
+    cfg = DSBAConfig(spec, alpha=0.5, lam=lam)
+    res = run(cfg, data, w, steps=50, record_every=50)
+    st = res.state
+    # recompute coeffs at current z for every (n, i): table rows touched most
+    # recently must match exactly
+    z = np.asarray(st.z)
+    idx, val, y = data.idx, data.val, data.y
+    u = np.einsum("nqk,nqk->nq", val, z[np.arange(3)[:, None, None], idx])
+    g = u - y
+    table = np.asarray(st.table_g)
+    # each row i of the table was set to g(x_i^T z^{t_i+1}) for the step t_i
+    # when i was last sampled; for the LAST sampled index per node it must
+    # match the current iterate's coefficient.
+    # We can't know which index was last sampled from outside, so check that
+    # at least one index per node matches the current-z coefficient.
+    match = np.isclose(table, g, atol=1e-10).any(axis=1)
+    assert match.all()
+
+
+def test_extra_dlm_ssda_converge():
+    # well-conditioned setup (lam=0.05): these tests verify implementation
+    # correctness; the paper-regime comparison lives in benchmarks/.
+    from repro.core.baselines import run_dlm, run_extra, run_ssda
+
+    data, spec, lam, w, z_star = _setup("ridge", n_nodes=5, q=20, d=12, lam=0.05)
+    graph = mixing.erdos_renyi_graph(5, 0.4, seed=1)
+
+    res_e = run_extra(spec, data, w, alpha=0.3, lam=lam, steps=2000,
+                      z_star=z_star, record_every=100)
+    assert res_e.dist2[-1] < 1e-10, f"EXTRA {res_e.dist2[-1]:.2e}"
+
+    res_d = run_dlm(spec, data, graph, c=0.3, beta=1.0, lam=lam, steps=4000,
+                    z_star=z_star, record_every=200)
+    assert res_d.dist2[-1] < 1e-8, f"DLM {res_d.dist2[-1]:.2e}"
+
+    res_s = run_ssda(spec, data, w, eta=0.03, momentum=0.5, lam=lam, steps=2000,
+                     z_star=z_star, record_every=200)
+    assert res_s.dist2[-1] < 1e-10, f"SSDA {res_s.dist2[-1]:.2e}"
+
+
+def test_ssda_logistic_inner_newton():
+    from repro.core.baselines import run_ssda
+
+    data, spec, lam, w, z_star = _setup("logistic", n_nodes=4, q=16, d=8,
+                                        lam=0.1)
+    res = run_ssda(spec, data, w, eta=0.05, momentum=0.5, lam=lam, steps=1500,
+                   z_star=z_star, record_every=300)
+    assert res.dist2[-1] < 1e-10, f"SSDA-logistic {res.dist2[-1]:.2e}"

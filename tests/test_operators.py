@@ -1,0 +1,180 @@
+"""Operator/resolvent correctness + monotonicity properties (Section 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.operators import (
+    OperatorSpec,
+    logistic_coeff,
+    logistic_coeff_prime,
+    ridge_coeff,
+)
+
+SPECS = {
+    "ridge": OperatorSpec("ridge"),
+    "logistic": OperatorSpec("logistic"),
+    "auc": OperatorSpec("auc", p=0.3),
+}
+
+
+def full_component_operator(spec, z, x, y):
+    """Dense B_{n,i}(z) for one sample — direct from the paper's formulas."""
+    d = x.shape[0]
+    u = x @ z[:d]
+    tail = z[d:]
+    g, tail_out = spec.coeff_and_tail(u, y, tail)
+    return jnp.concatenate([g * x, tail_out])
+
+
+@pytest.mark.parametrize("kind", sorted(SPECS))
+def test_resolvent_solves_implicit_equation(kind):
+    """z = J_{a B}(psi)  <=>  z + a B(z) = psi (eq. 6-7)."""
+    spec = SPECS[kind]
+    rng = np.random.default_rng(0)
+    d = 7
+    x = rng.standard_normal(d)
+    x /= np.linalg.norm(x)
+    for y in (1.0, -1.0):
+        psi = jnp.asarray(rng.standard_normal(d + spec.tail_dim))
+        alpha = 0.37
+        s = x @ psi[:d]
+        g, tail_z = spec.resolvent_coeff_and_tail(
+            jnp.asarray(s), psi[d:], jnp.asarray(y), alpha, 1.0
+        )
+        z = psi.at[:d].add(-alpha * g * jnp.asarray(x))
+        if spec.tail_dim:
+            z = z.at[d:].set(tail_z)
+        res = z + alpha * full_component_operator(spec, z, jnp.asarray(x), y)
+        np.testing.assert_allclose(np.asarray(res), np.asarray(psi), atol=1e-8)
+
+
+@pytest.mark.parametrize("kind", sorted(SPECS))
+def test_resolvent_regularized_scaling_trick(kind):
+    """J_{a B^lam}(psi) == J_{rho a B}(rho psi), rho = 1/(1+lam a) (Sec. 7)."""
+    spec = SPECS[kind]
+    rng = np.random.default_rng(1)
+    d = 5
+    x = rng.standard_normal(d)
+    x /= np.linalg.norm(x)
+    y, alpha, lam = -1.0, 0.21, 0.3
+    rho = 1.0 / (1.0 + alpha * lam)
+    psi = jnp.asarray(rng.standard_normal(d + spec.tail_dim))
+    s = x @ psi[:d]
+    g, tail_z = spec.resolvent_coeff_and_tail(
+        jnp.asarray(rho * s), rho * psi[d:], jnp.asarray(y), rho * alpha, 1.0
+    )
+    z = rho * psi
+    z = z.at[:d].add(-rho * alpha * g * jnp.asarray(x))
+    if spec.tail_dim:
+        z = z.at[d:].set(tail_z)
+    # must satisfy (1 + a lam) z + a B(z) = psi
+    res = (1 + alpha * lam) * z + alpha * full_component_operator(
+        spec, z, jnp.asarray(x), y
+    )
+    np.testing.assert_allclose(np.asarray(res), np.asarray(psi), atol=1e-8)
+
+
+def test_auc_operator_matches_autodiff_of_saddle_function():
+    """B = [df/dw; df/da; df/db; -df/dtheta] for f of eq. (12), lam=0."""
+    p = 0.3
+    spec = OperatorSpec("auc", p=p)
+    rng = np.random.default_rng(2)
+    d = 6
+    x = rng.standard_normal(d)
+    x /= np.linalg.norm(x)
+
+    def f(z, y):
+        w, a, b, th = z[:d], z[d], z[d + 1], z[d + 2]
+        u = x @ w
+        pos = y > 0
+        return (
+            -p * (1 - p) * th**2
+            + jnp.where(pos, (1 - p) * (u - a) ** 2, p * (u - b) ** 2)
+            + 2 * (1 + th) * jnp.where(pos, -(1 - p) * u, p * u)
+        )
+
+    for y in (1.0, -1.0):
+        z = jnp.asarray(rng.standard_normal(d + 3))
+        grad = jax.grad(f)(z, y)
+        expected = grad.at[-1].multiply(-1.0)  # negate theta component
+        got = full_component_operator(spec, z, jnp.asarray(x), y)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(expected), atol=1e-9)
+
+
+def test_logistic_coeff_prime_matches_autodiff():
+    u = jnp.linspace(-4, 4, 23)
+    for y in (1.0, -1.0):
+        want = jax.vmap(jax.grad(lambda uu: logistic_coeff(uu, y)))(u)
+        got = logistic_coeff_prime(u, y)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-10)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.floats(-3, 3), min_size=4, max_size=4),
+    st.lists(st.floats(-3, 3), min_size=4, max_size=4),
+    st.sampled_from(["ridge", "logistic"]),
+    st.sampled_from([1.0, -1.0]),
+)
+def test_component_operator_is_monotone(z1_l, z2_l, kind, y):
+    """(B(z1)-B(z2))^T (z1-z2) >= 0 (eq. 2) for convex-loss operators."""
+    spec = SPECS[kind]
+    x = np.asarray([0.5, -0.5, 0.5, 0.5])
+    z1, z2 = jnp.asarray(z1_l), jnp.asarray(z2_l)
+    b1 = full_component_operator(spec, z1, jnp.asarray(x), y)
+    b2 = full_component_operator(spec, z2, jnp.asarray(x), y)
+    inner = float((b1 - b2) @ (z1 - z2))
+    assert inner >= -1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.floats(-3, 3), min_size=7, max_size=7),
+    st.lists(st.floats(-3, 3), min_size=7, max_size=7),
+    st.sampled_from([1.0, -1.0]),
+)
+def test_auc_operator_is_monotone(z1_l, z2_l, y):
+    """The AUC saddle differential is monotone (Rockafellar 1970)."""
+    spec = SPECS["auc"]
+    x = np.full(4, 0.5)
+    z1, z2 = jnp.asarray(z1_l), jnp.asarray(z2_l)
+    b1 = full_component_operator(spec, z1, jnp.asarray(x), y)
+    b2 = full_component_operator(spec, z2, jnp.asarray(x), y)
+    inner = float((b1 - b2) @ (z1 - z2))
+    assert inner >= -1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.floats(-5, 5), min_size=5, max_size=5),
+    st.lists(st.floats(-5, 5), min_size=5, max_size=5),
+    st.sampled_from(["ridge", "logistic", "auc"]),
+    st.sampled_from([1.0, -1.0]),
+    st.floats(0.05, 2.0),
+)
+def test_resolvent_is_firmly_nonexpansive(p1, p2, kind, y, alpha):
+    """||J(psi1) - J(psi2)|| <= ||psi1 - psi2|| for monotone B (+lam)."""
+    spec = SPECS[kind]
+    d = 5 - 0
+    x = np.full(d, 1.0 / np.sqrt(d))
+    t = spec.tail_dim
+    rng = np.random.default_rng(3)
+    tail_extra = rng.standard_normal((2, t))
+
+    def J(psi):
+        s = x @ psi[:d]
+        g, tail_z = spec.resolvent_coeff_and_tail(
+            jnp.asarray(s), psi[d:], jnp.asarray(y), alpha, 1.0
+        )
+        z = psi.at[:d].add(-alpha * g * jnp.asarray(x))
+        if t:
+            z = z.at[d:].set(tail_z)
+        return z
+
+    psi1 = jnp.asarray(np.concatenate([p1, tail_extra[0]]))
+    psi2 = jnp.asarray(np.concatenate([p2, tail_extra[1]]))
+    n_out = float(jnp.linalg.norm(J(psi1) - J(psi2)))
+    n_in = float(jnp.linalg.norm(psi1 - psi2))
+    assert n_out <= n_in + 1e-8

@@ -1,0 +1,137 @@
+"""Hypothesis property tests on system-wide invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mixing
+from repro.core.gossip import (
+    GossipConfig, block_topk_compress, scatter_decompress, topk_compress,
+)
+from repro.data.synthetic import make_regression
+from repro.train.step import ce_loss
+
+
+# ---------------------------------------------------------------------------
+# mixing matrices
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.floats(0.3, 0.9), st.integers(0, 100))
+def test_er_laplacian_mixing_always_valid(n, p, seed):
+    g = mixing.erdos_renyi_graph(n, p, seed=seed)
+    w = mixing.laplacian_mixing(g)
+    mixing.validate_mixing(w, g)
+    gamma = mixing.graph_gamma(w)
+    assert 0 < gamma <= 1.0 + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16))
+def test_ring_gamma_decreases_with_size(n):
+    """Bigger rings are worse-connected: kappa_g grows."""
+    w_n = mixing.laplacian_mixing(mixing.ring_graph(n))
+    w_2n = mixing.laplacian_mixing(mixing.ring_graph(2 * n))
+    assert mixing.graph_gamma(w_2n) <= mixing.graph_gamma(w_n) + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 10))
+def test_w_tilde_spectrum_in_half_one(n):
+    """W~ = (I+W)/2 has eigenvalues in [1/2, 1] (used by Lemma 6.4)."""
+    g = mixing.erdos_renyi_graph(n, 0.5, seed=n)
+    wt = mixing.w_tilde(mixing.laplacian_mixing(g))
+    eig = np.linalg.eigvalsh(wt)
+    assert eig.min() >= 0.5 - 1e-9 and eig.max() <= 1 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# gossip weights == W~ row (circulant decomposition)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 12), st.sampled_from(["ring", "exponential"]))
+def test_shifts_and_weights_reconstruct_w_tilde(n, topo):
+    gc = GossipConfig(n_pods=n, topology=topo)
+    g, w = gc.graph_and_weights()
+    wt = mixing.w_tilde(w)
+    shifts, weights, w_self = gc.shifts_and_weights()
+    rec = np.zeros(n)
+    rec[0] = w_self
+    for s, wgt in zip(shifts, weights):
+        scale = wgt if (2 * s) % n else wgt / 2.0
+        rec[s % n] += scale
+        rec[(-s) % n] += scale
+    np.testing.assert_allclose(rec, wt[0], atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(8, 200), st.integers(1, 8), st.integers(0, 50))
+def test_topk_selects_largest_and_decompress_is_partial_identity(n, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n))
+    k = min(k, n)
+    vals, idx = topk_compress(x, k)
+    # selected = k largest magnitudes
+    thresh = np.sort(np.abs(np.asarray(x)))[-k]
+    assert (np.abs(np.asarray(vals)) >= thresh - 1e-12).all()
+    # decompression reproduces exactly those coordinates
+    d = scatter_decompress(x.shape, vals, idx)
+    np.testing.assert_allclose(np.asarray(d)[np.asarray(idx)],
+                               np.asarray(x)[np.asarray(idx)])
+    # residual norm shrinks
+    assert float(jnp.linalg.norm(x - d)) <= float(jnp.linalg.norm(x)) + 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(10, 400), st.floats(0.02, 0.5), st.integers(4, 64),
+       st.integers(0, 20))
+def test_block_topk_residual_contracts(n, ratio, block, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n))
+    vals, idx = block_topk_compress(x, ratio, block)
+    d = scatter_decompress(x.shape, vals, idx)
+    assert float(jnp.linalg.norm(x - d)) < float(jnp.linalg.norm(x)) + 1e-12
+    # reported pairs are true coordinates of x
+    nz = np.asarray(vals) != 0
+    np.testing.assert_allclose(np.asarray(x)[np.asarray(idx)[nz]],
+                               np.asarray(vals)[nz])
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(2, 50), st.integers(0, 10))
+def test_ce_loss_nonnegative_and_bounded_for_uniform(v, s, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.zeros((1, s, v))
+    targets = jnp.asarray(rng.integers(0, v, (1, s)))
+    l = float(ce_loss(logits, targets))
+    np.testing.assert_allclose(l, np.log(v), rtol=1e-6)
+    logits2 = jnp.asarray(rng.standard_normal((1, s, v)))
+    assert float(ce_loss(logits2, targets)) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# dataset invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(4, 20), st.integers(8, 64),
+       st.integers(2, 8), st.integers(0, 5))
+def test_synthetic_rows_normalized_distinct_indices(n, q, d, k, seed):
+    k = min(k, d)
+    data = make_regression(n, q, d, k=k, seed=seed)
+    norms = np.sqrt((data.val**2).sum(-1))
+    np.testing.assert_allclose(norms, 1.0, rtol=1e-6)
+    # padded-CSR guarantee: indices distinct within each row
+    for nn in range(n):
+        for qq in range(q):
+            row = data.idx[nn, qq]
+            assert len(set(row.tolist())) == k

@@ -1,0 +1,96 @@
+"""DSBA-s (Section 5.1): protocol == dense algorithm, costs == O(N rho d)."""
+import numpy as np
+import pytest
+
+from repro.core import mixing
+from repro.core.dsba import DSBAConfig, draw_indices, run
+from repro.core.operators import OperatorSpec
+from repro.core.sparse_comm import (
+    dense_doubles_per_iter,
+    run_sparse,
+    sparse_doubles_per_iter,
+)
+from repro.data.synthetic import make_classification, make_regression
+
+
+def _setup(task, n_nodes=6, q=8, d=24, k=4, seed=0):
+    if task == "ridge":
+        data = make_regression(n_nodes, q, d, k=k, seed=seed)
+        spec = OperatorSpec("ridge")
+    elif task == "logistic":
+        data = make_classification(n_nodes, q, d, k=k, seed=seed)
+        spec = OperatorSpec("logistic")
+    else:
+        data = make_classification(n_nodes, q, d, k=k, positive_ratio=0.3, seed=seed)
+        spec = OperatorSpec("auc", p=data.positive_ratio())
+    graph = mixing.erdos_renyi_graph(n_nodes, 0.4, seed=2)
+    w = mixing.laplacian_mixing(graph)
+    return data, spec, graph, w
+
+
+@pytest.mark.parametrize("task", ["ridge", "logistic", "auc"])
+@pytest.mark.parametrize("method", ["dsba", "dsa"])
+def test_sparse_comm_trajectory_equals_dense(task, method):
+    """The relay protocol must reproduce the dense trajectory exactly."""
+    data, spec, graph, w = _setup(task)
+    steps = 60
+    lam = 1.0 / (10 * data.total)
+    cfg = DSBAConfig(spec, alpha=0.3, lam=lam, method=method)
+    indices = draw_indices(steps, data.n_nodes, data.q, seed=7)
+
+    dense = run(cfg, data, w, steps, record_every=steps, indices=indices,
+                keep_snapshots=True)
+    sparse = run_sparse(cfg, data, graph, w, steps, indices)
+
+    np.testing.assert_allclose(
+        sparse.z_trace[-1], np.asarray(dense.state.z), rtol=0, atol=1e-12
+    )
+    assert sparse.recon_max_err < 1e-9, sparse.recon_max_err
+
+
+def test_sparse_comm_reconstruction_on_larger_diameter_graph():
+    """Ring graph (diameter 3): deltas arrive with multi-hop delays."""
+    data, spec, _, _ = _setup("ridge", n_nodes=7)
+    graph = mixing.ring_graph(7)
+    w = mixing.laplacian_mixing(graph)
+    steps = 40
+    cfg = DSBAConfig(spec, alpha=0.3, lam=1e-3)
+    indices = draw_indices(steps, 7, data.q, seed=3)
+    dense = run(cfg, data, w, steps, record_every=steps, indices=indices)
+    sparse = run_sparse(cfg, data, graph, w, steps, indices)
+    np.testing.assert_allclose(
+        sparse.z_trace[-1], np.asarray(dense.state.z), atol=1e-12
+    )
+    assert sparse.recon_max_err < 1e-9
+
+
+def test_sparse_comm_cost_is_o_n_rho_d():
+    """Steady-state per-iteration DOUBLEs: (N-1)*k  vs  dense deg*d."""
+    data, spec, graph, w = _setup("ridge", n_nodes=6, d=600, k=5)
+    steps = 30
+    cfg = DSBAConfig(spec, alpha=0.3, lam=1e-3)
+    indices = draw_indices(steps, 6, data.q, seed=3)
+    res = run_sparse(cfg, data, graph, w, steps, indices)
+
+    per_iter = np.diff(res.doubles_received, axis=0)[-10:]  # steady state
+    expect = sparse_doubles_per_iter(6, data.k, spec.tail_dim)
+    assert (per_iter == expect).all(), (per_iter, expect)
+
+    dense_cost = dense_doubles_per_iter(graph, data.d)
+    # the headline claim: sparse cost << dense cost when rho*d << d
+    assert per_iter.max() * 10 < dense_cost.min()
+
+
+def test_sparse_comm_warmup_cost_is_one_time():
+    data, spec, graph, w = _setup("ridge", n_nodes=5, d=200, k=4)
+    steps = 25
+    cfg = DSBAConfig(spec, alpha=0.3, lam=1e-3)
+    indices = draw_indices(steps, 5, data.q, seed=3)
+    res = run_sparse(cfg, data, graph, w, steps, indices)
+    E = graph.diameter
+    total_warmup_dense = res.doubles_received[E + 1].max()
+    # warm-up includes the one-time dense z^1 flood: (N-1)*D doubles
+    assert total_warmup_dense >= (5 - 1) * data.d
+    # after warm-up, growth is exactly the sparse rate
+    growth = np.diff(res.doubles_received, axis=0)[E + 2 :]
+    assert (growth == sparse_doubles_per_iter(5, data.k, 0)).all()
