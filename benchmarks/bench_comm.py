@@ -3,8 +3,18 @@
 Runs the ACTUAL DSBA-s relay simulator and checks measured DOUBLEs per node
 per iteration against the closed-form O(N rho d) model and against the dense
 O(Delta(G) d) baselines; prints the crossover ratios the paper claims.
+
+Also sweeps ring topologies at N in {8, 16, 32} — the regime where DSA's
+O(N) relay delays and Lan et al.'s communication-complexity analysis bite,
+and where the pre-vectorization per-observer Python loop was intractable.
 """
 from __future__ import annotations
+
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
@@ -23,9 +33,48 @@ def measure(n=8, q=10, d=800, k=12, steps=25, seed=0):
     w = mixing.laplacian_mixing(graph)
     cfg = DSBAConfig(OperatorSpec("ridge"), alpha=0.3, lam=1e-3)
     idx = draw_indices(steps, n, q, seed=3)
-    res = run_sparse(cfg, data, graph, w, steps, idx)
+    res = run_sparse(cfg, data, graph, w, steps, idx, verify=True)
     steady = np.diff(res.doubles_received, axis=0)[-8:]
     return data, graph, steady, res
+
+
+def topology_sweep(sizes=(8, 16, 32), q=10, d=256, k=8, seed=0):
+    """Ring-graph sweep: steady-state doubles must match the closed form.
+
+    Rings maximize the diameter (N/2 relay hops), so this exercises the
+    deepest reconstruction recursion the protocol supports. Runs long enough
+    past warm-up (2*diam + 40 iterations) that steady state is unambiguous.
+    """
+    print(f"\nring-topology sweep (q={q}, d={d}, k={k}):")
+    print(f"{'N':>4} {'diam':>5} {'steps':>6} {'doubles/node/iter':>18} "
+          f"{'model':>6} {'dense':>8} {'wall':>7} {'ms/iter':>8}")
+    for n in sizes:
+        graph = mixing.ring_graph(n)
+        w = mixing.laplacian_mixing(graph)
+        data = make_regression(n, q, d, k=k, seed=seed)
+        cfg = DSBAConfig(OperatorSpec("ridge"), alpha=0.3, lam=1e-3)
+        steps = 2 * graph.diameter + 40
+        extra = 600
+        idx = draw_indices(steps + extra, n, q, seed=3)
+        t0 = time.perf_counter()
+        res = run_sparse(cfg, data, graph, w, steps, idx)
+        wall = time.perf_counter() - t0
+        # wall above is compile-dominated (one jitted scan per call); the
+        # marginal cost of `extra` more iterations isolates the engine speed
+        t0 = time.perf_counter()
+        run_sparse(cfg, data, graph, w, steps + extra, idx)
+        ms_iter = 1e3 * (time.perf_counter() - t0 - wall) / extra
+        steady = np.diff(res.doubles_received, axis=0)[graph.diameter + 2 :]
+        measured = sorted(set(steady.reshape(-1).tolist()))
+        model = sparse_doubles_per_iter(n, k, 0)
+        assert measured == [model], (n, measured, model)
+        dense = int(dense_doubles_per_iter(graph, d).max())
+        print(f"{n:>4} {graph.diameter:>5} {steps:>6} {str(measured):>18} "
+              f"{model:>6} {dense:>8} {wall:>6.2f}s "
+              f"{'<noise' if ms_iter <= 0 else f'{ms_iter:.2f}':>8}")
+    print("(wall includes the one-time XLA compile of the jitted scan; "
+          "ms/iter is the marginal cost of 600 extra iterations, '<noise' "
+          "when it is below compile-time variance)")
 
 
 def main():
@@ -51,6 +100,8 @@ def main():
         dd = 4 * p["d"]  # deg ~ 4
         print(f"{name:>10} {p['d']:>9} {p['k']:>5} {s:>10,} {dd:>12,} "
               f"{dd / s:>7.0f}x")
+
+    topology_sweep()
 
 
 if __name__ == "__main__":

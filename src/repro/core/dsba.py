@@ -231,6 +231,29 @@ def dsba_step(
     )
 
 
+def make_step_fn(cfg: DSBAConfig, data, w: np.ndarray):
+    """Device-resident local-update closure: step(state, i_t, mix=None).
+
+    Bakes the dataset and mixing matrices into device arrays ONCE and returns
+    a pure function of (state, i_t, mix) that is safe to call inside jit /
+    lax.scan. This is the mix-row hook used by core.sparse_comm: the sparse-
+    communication engine composes this step with its reconstruction-derived
+    mixing rows entirely on device, so per-iteration state never round-trips
+    through NumPy.
+    """
+    dt = data.val.dtype
+    w_j = jnp.asarray(w, dt)
+    wt_j = jnp.asarray(w_tilde(w), dt)
+    idx_j = jnp.asarray(data.idx)
+    val_j = jnp.asarray(data.val)
+    y_j = jnp.asarray(data.y)
+
+    def step(state: DSBAState, i_t: jax.Array, mix: jax.Array | None = None):
+        return dsba_step(cfg, w_j, wt_j, idx_j, val_j, y_j, state, i_t, mix)
+
+    return step
+
+
 def draw_indices(steps: int, n_nodes: int, q: int, seed: int = 0) -> np.ndarray:
     """(steps, N) uniform sample indices — shared by dense and sparse runs."""
     rng = np.random.default_rng(seed)
@@ -269,17 +292,12 @@ def run(
     if z0 is None:
         z0 = np.zeros((n, dtot), dtype=dt)
     state = init_state(cfg, data, jnp.asarray(z0))
-
-    w_j = jnp.asarray(w, dtype=dt)
-    wt_j = jnp.asarray(w_tilde(w), dtype=dt)
-    idx_j = jnp.asarray(data.idx)
-    val_j = jnp.asarray(data.val)
-    y_j = jnp.asarray(data.y)
+    step = make_step_fn(cfg, data, w)
 
     @jax.jit
     def chunk(state, idx_block):
         def body(st, i_t):
-            return dsba_step(cfg, w_j, wt_j, idx_j, val_j, y_j, st, i_t), None
+            return step(st, i_t), None
 
         st, _ = jax.lax.scan(body, state, idx_block)
         return st

@@ -10,7 +10,7 @@ rule ("only the minimum-index neighbor forwards") means each delta is
 received exactly once per node, giving the paper's O(N rho d) per-node
 per-iteration communication.
 
-Availability invariant (proved by induction in the paper; asserted here):
+Availability invariant (proved by induction in the paper):
   node u can reconstruct z_l^s at iteration t  iff  s <= t + 1 - xi(l, u),
 so in particular neighbors' *current* iterates z_m^t are reconstructable at
 iteration t — which is exactly what psi_n^t (eq. 29) needs.
@@ -20,12 +20,41 @@ phibar_n^0, so z^1 cannot be reconstructed from deltas alone. The protocol
 therefore floods the (dense) z^1 once during warm-up — a one-time O(N d)
 cost that we account for honestly. z^0 is the shared consensus initializer.
 
-The simulator advances all nodes with the SAME jitted local update as the
-dense runtime (core.dsba.dsba_step), feeding each node a mixing row built
-solely from its own reconstruction store — i.e. from information that the
-relay schedule has actually delivered. Reconstructions are additionally
-checked against the true trajectory (they agree to machine precision; any
-formula error in (28)/(35) would explode this).
+Vectorized engine (default, ``engine="vectorized"``)
+----------------------------------------------------
+The eq. 28 recursion is the SAME affine map for every (observer, source)
+pair, so the simulator batches it instead of looping in Python:
+
+* **Ring-buffer reconstruction.** Per-pair stores keep only the last
+  ``diameter + 2`` reconstructed iterates, ``R[s % depth, u, l] =`` node u's
+  copy of ``z_l^s`` — O(N^2 * diam * d) memory instead of the previous
+  O(N^2 * T * d) NaN-filled array. Dense per-source deltas live in a matching
+  ``(depth, N, D)`` ring.
+* **Distance waves.** At iteration t, pair (u, l) at distance xi advances by
+  exactly one state, ``s = t + 1 - xi``. Pairs are grouped by distance and
+  advanced farthest-first (the paper's V_j ordering) so a distance-xi pair
+  can consume the value its distance-(xi+1) neighbor produced this same
+  iteration. Each wave is one batched gather + fused AXPY over all its pairs.
+* **Single XLA program.** The whole run — warm-up flood, waves, mixing rows,
+  and the shared local update (core.dsba.make_step_fn) — is one jitted
+  ``lax.scan``; per-iteration state never round-trips through NumPy.
+* **Closed-form message accounting.** ``doubles_received``/``ints_received``
+  are computed after the scan from the per-iteration nnz log:
+  ``doubles[t, u] = sum_l nnz[t - xi(u,l), l] + tail`` (+ the one-time dense
+  z^1 flood of D doubles at ``t == xi``), instead of inside the hop loop.
+* **Pallas hot path.** Densifying the per-node sparse deltas is routed
+  through ``kernels.sparse_saga.sparse_axpy`` (one-hot-matmul scatter on the
+  TPU MXU; ``interpret=True`` fallback off-TPU, with ``compute_dtype``
+  matching the trajectory dtype so f64 runs stay bit-exact).
+
+``verify=True`` (debug mode) additionally carries an iterate-tag ring and a
+truth ring through the scan: every read is checked against the availability
+invariant (a violation raises ``ProtocolViolation``) and every reconstructed
+value is compared against the true trajectory, reported as
+``recon_max_err``. The fast path skips both and reports ``nan``.
+
+``engine="reference"`` is the original per-observer Python loop (kept as the
+parity oracle for tests; it always verifies).
 
 Cost model (doubles_received): a delta message carries nnz(delta) = k values
 (+ tail_dim scalars for AUC); index integers are tracked separately as
@@ -40,8 +69,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dsba import DSBAConfig, dsba_step, init_state
+from repro.core.dsba import DSBAConfig, init_state, make_step_fn
 from repro.core.mixing import Graph, w_tilde
+from repro.kernels.ops import saga_sparse_axpy
+
+
+class ProtocolViolation(AssertionError):
+    """A reconstruction consumed a value the relay had not yet delivered."""
 
 
 @dataclasses.dataclass
@@ -49,7 +83,66 @@ class SparseRunResult:
     z_trace: np.ndarray  # (T+1, N, D)   true trajectory (z^0 .. z^T)
     doubles_received: np.ndarray  # (T, N) cumulative DOUBLEs per node
     ints_received: np.ndarray  # (T, N) cumulative index ints per node
-    recon_max_err: float  # max |reconstruction - truth| over the run
+    recon_max_err: float  # max |reconstruction - truth|; nan unless verified
+
+
+@dataclasses.dataclass(frozen=True)
+class _Tables:
+    """Static per-graph tables for the vectorized engine (the reference
+    engine keeps its own inline dist/neighbor bookkeeping, verbatim from the
+    original loop, so the parity oracle stays independent)."""
+
+    dist: np.ndarray  # (N, N) BFS distances xi
+    nbr_pad: np.ndarray  # (N, A) sorted neighbors + self, padded with self
+    wt_pad: np.ndarray  # (N, A) matching W~ weights (0 on padding)
+    pad_mask: np.ndarray  # (N, A) True on real entries
+    pairs: dict[int, tuple[np.ndarray, np.ndarray]]  # xi -> (obs, src)
+    dmax: int
+    depth: int  # ring-buffer depth = diameter + 2
+
+
+def _protocol_tables(graph: Graph, wt: np.ndarray) -> _Tables:
+    n = graph.n
+    dist = np.stack([graph.distances_from(u) for u in range(n)])
+    lists = [sorted(graph.neighbors(u)) + [u] for u in range(n)]
+    width = max(len(x) for x in lists)
+    nbr_pad = np.empty((n, width), dtype=np.int32)
+    wt_pad = np.zeros((n, width), dtype=wt.dtype)
+    pad_mask = np.zeros((n, width), dtype=bool)
+    for u, lst in enumerate(lists):
+        nbr_pad[u, : len(lst)] = lst
+        nbr_pad[u, len(lst) :] = u  # padding reads a live slot, weight 0
+        wt_pad[u, : len(lst)] = wt[u, lst]
+        pad_mask[u, : len(lst)] = True
+    dmax = int(dist.max())
+    pairs = {
+        xi: tuple(np.nonzero(dist == xi)) for xi in range(1, dmax + 1)
+    }
+    return _Tables(dist, nbr_pad, wt_pad, pad_mask, pairs, dmax,
+                   depth=max(3, dmax + 2))
+
+
+def _closed_form_costs(
+    nnz_log: np.ndarray, dist: np.ndarray, tail: int, d_total: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Cumulative (doubles, ints) per node from the per-iteration nnz log.
+
+    The delta broadcast by source l at iteration tau reaches observer u at
+    iteration tau + xi(u, l); the dense z^1 flood (d_total doubles) arrives
+    exactly at t == xi. Equivalent to the reference engine's in-loop
+    accounting, but one vectorized pass over the (T, N, N) arrival grid.
+    """
+    steps, n = nnz_log.shape
+    ts = np.arange(steps)[:, None, None]  # (T, 1, 1)
+    xi = dist[None, :, :]  # (1, obs, src)
+    t_src = ts - xi  # broadcast delta emission time
+    arrived = (t_src >= 0) & (xi > 0)
+    src = np.arange(n)[None, None, :]
+    nnz = nnz_log[np.clip(t_src, 0, None), src]  # (T, obs, src)
+    ints_inc = np.where(arrived, nnz, 0).sum(axis=2)
+    doubles_inc = np.where(arrived, nnz + tail, 0).sum(axis=2)
+    doubles_inc += d_total * ((ts == xi) & (xi > 0)).sum(axis=2)
+    return np.cumsum(doubles_inc, axis=0), np.cumsum(ints_inc, axis=0)
 
 
 def run_sparse(
@@ -60,8 +153,266 @@ def run_sparse(
     steps: int,
     indices: np.ndarray,
     z0: np.ndarray | None = None,
+    *,
+    engine: str = "vectorized",
+    verify: bool = False,
+    use_pallas: str = "auto",
 ) -> SparseRunResult:
-    """Run DSBA-s (or DSA-s) for `steps` iterations on `graph`."""
+    """Run DSBA-s (or DSA-s) for `steps` iterations on `graph`.
+
+    engine: "vectorized" (batched jitted scan, default) or "reference"
+        (the original per-observer Python loop; always verifies).
+    verify: vectorized engine only — check the availability invariant and
+        compare every reconstruction against the truth (recon_max_err).
+    use_pallas: "auto" routes delta densification through the Pallas kernel
+        (compiled on TPU, interpret=True fallback elsewhere); "on" forces the
+        compiled kernel, "interpret" forces interpret mode, and "off" uses a
+        plain jnp scatter (fastest to trace on CPU).
+    """
+    if steps < 1:
+        raise ValueError("steps must be >= 1")
+    if engine == "reference":
+        return _run_reference(cfg, data, graph, w, steps, indices, z0)
+    if engine != "vectorized":
+        raise ValueError(f"unknown engine {engine!r}")
+    return _run_vectorized(
+        cfg, data, graph, w, steps, indices, z0, verify=verify,
+        use_pallas=use_pallas,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized engine
+# ---------------------------------------------------------------------------
+
+def _run_vectorized(
+    cfg, data, graph, w, steps, indices, z0, *, verify, use_pallas
+) -> SparseRunResult:
+    spec = cfg.spec
+    alpha, lam = cfg.alpha, cfg.lam
+    n = data.n_nodes
+    q = data.q
+    tail = spec.tail_dim
+    d = data.d
+    D = d + tail
+    dt = data.val.dtype
+    if z0 is None:
+        z0 = np.zeros((n, D), dtype=dt)
+
+    wt = w_tilde(w)
+    tb = _protocol_tables(graph, wt)
+    depth, dmax = tb.depth, tb.dmax
+    scale = (q - 1.0) / q
+
+    step = make_step_fn(cfg, data, w)
+    state0 = init_state(cfg, data, jnp.asarray(z0))
+
+    # constants baked into the compiled scan
+    dist_j = jnp.asarray(tb.dist, jnp.int32)
+    nbr_j = jnp.asarray(tb.nbr_pad)
+    wtn_j = jnp.asarray(tb.wt_pad, dt)
+    padm_j = jnp.asarray(tb.pad_mask)
+    mix0_j = jnp.asarray(w @ z0, dt)  # t=0 mixing: z^0 is consensus-shared
+    iu = jnp.arange(n)
+    width = tb.nbr_pad.shape[1]
+
+    # padded per-distance pair tables for the wave scan: row i holds the
+    # (observer, source) pairs at distance xi = dmax - i, padded to the
+    # widest level with masked (0, 0) entries.
+    if dmax > 0:
+        pmax = max(len(u) for u, _ in tb.pairs.values())
+        xis = np.arange(dmax, 0, -1, dtype=np.int32)
+        up_t = np.zeros((dmax, pmax), np.int32)
+        lp_t = np.zeros((dmax, pmax), np.int32)
+        real_t = np.zeros((dmax, pmax), bool)
+        for i, xi in enumerate(xis):
+            u_xi, l_xi = tb.pairs[int(xi)]
+            up_t[i, : len(u_xi)] = u_xi
+            lp_t[i, : len(l_xi)] = l_xi
+            real_t[i, : len(u_xi)] = True
+        wave_xs = (
+            jnp.asarray(xis),
+            jnp.asarray(up_t),
+            jnp.asarray(lp_t),
+            jnp.asarray(real_t),
+        )
+    else:
+        wave_xs = None
+
+    if use_pallas not in ("auto", "on", "interpret", "off"):
+        raise ValueError(f"unknown use_pallas mode {use_pallas!r}")
+    # This path follows the protocol spec rather than kernels.ops "auto"
+    # (which falls back to the jnp oracle off-TPU): the relay's delta
+    # densification stays on the Pallas kernel everywhere, interpret=True
+    # being the CPU fallback. Resolve "auto" here, dispatch through ops.
+    kernel_mode = use_pallas
+    if kernel_mode == "auto":
+        kernel_mode = "on" if jax.default_backend() == "tpu" else "interpret"
+    interpret = kernel_mode == "interpret"
+
+    def densify_delta(st) -> jax.Array:
+        """(N, D) dense delta rows from the padded-CSR delta of this step."""
+        base = jnp.zeros((n, D), dt)
+        if tail:
+            base = base.at[:, d:].set(st.dtail_prev)
+        return saga_sparse_axpy(
+            base, st.didx_prev, st.dval_prev, st.dg_prev,
+            jnp.ones((n,), dt), use_pallas=kernel_mode, compute_dtype=dt,
+            node_block=n if interpret else 1,
+        )
+
+    def neighborhood_sum(g_cur, g_prev, wts):
+        """sum_m wt[.,m] * (2 z_m^s - z_m^{s-1}), reference add order."""
+        acc = jnp.zeros(g_cur.shape[::2], dt)  # (P, D)
+        for a in range(width):
+            acc = acc + wts[:, a, None] * (2.0 * g_cur[:, a] - g_prev[:, a])
+        return acc
+
+    def body(carry, xs):
+        state, z1, R, DD, SR, Z, err, ok = carry
+        t, i_t = xs
+        jt = t % depth
+        jtm1 = (t - 1) % depth
+        z_t = state.z
+
+        # -- own history: z^t is exact and free (computed locally last step)
+        R = R.at[jt, iu, iu].set(z_t)
+        if verify:
+            SR = SR.at[jt, iu, iu].set(t)
+            Z = Z.at[jt].set(z_t)
+        z1 = jnp.where(t == 1, z_t, z1)
+
+        # -- one-time dense z^1 warm-up flood arrives at t == xi ------------
+        def flood(ops):
+            R_, SR_ = ops
+            mask = dist_j == t
+            R_ = R_.at[1].set(
+                jnp.where(mask[:, :, None], z1[None, :, :], R_[1])
+            )
+            if verify:
+                SR_ = SR_.at[1].set(jnp.where(mask, 1, SR_[1]))
+            return R_, SR_
+
+        R, SR = jax.lax.cond(
+            (t >= 1) & (t <= dmax), flood, lambda ops: ops, (R, SR)
+        )
+
+        # -- reconstruction waves, farthest-first (paper's V_j ordering) ----
+        # One inner scan over distance levels xi = dmax..1: every pair at
+        # distance xi advances by exactly one reconstructed state,
+        # s = t + 1 - xi. Warm-up (t <= xi) and row padding are handled by
+        # masking the write: reads of not-yet-valid slots hit
+        # zero-initialized memory (finite), and the value is discarded.
+        def wave(wc, wx):
+            R_, SR_, err_, ok_ = wc
+            xi, up, lp, real = wx
+            s = t + 1 - xi
+            j1, j2, jn = (s - 1) % depth, (s - 2) % depth, s % depth
+            m_idx = nbr_j[lp]  # (P, A)
+            G1 = R_[j1, up[:, None], m_idx]  # (P, A, D) one fused gather
+            G2 = R_[j2, up[:, None], m_idx]
+            mix = neighborhood_sum(G1, G2, wtn_j[lp])
+            corr = alpha * (scale * DD[j2, lp] - DD[j1, lp])
+            self1 = R_[j1, up, lp]
+            if cfg.method == "dsba":
+                new = (mix + alpha * lam * self1 + corr) / (1.0 + alpha * lam)
+            else:  # dsa
+                self2 = R_[j2, up, lp]
+                new = mix + corr - alpha * lam * (self1 - self2)
+            write = real & (t >= xi + 1)  # (P,)
+            new = jnp.where(write[:, None], new, R_[jn, up, lp])
+            R_ = R_.at[jn, up, lp].set(new)
+            if verify:
+                S1 = SR_[j1, up[:, None], m_idx]
+                S2 = SR_[j2, up[:, None], m_idx]
+                reads = (S1 == s - 1) & (S2 == s - 2)
+                checked = padm_j[lp] & write[:, None]
+                ok_ &= jnp.all(jnp.where(checked, reads, True))
+                SR_ = SR_.at[jn, up, lp].set(
+                    jnp.where(write, s, SR_[jn, up, lp])
+                )
+                err_ = jnp.maximum(
+                    err_,
+                    jnp.max(
+                        jnp.where(
+                            write[:, None], jnp.abs(new - Z[jn, lp]), 0.0
+                        )
+                    ),
+                )
+            return (R_, SR_, err_, ok_), None
+
+        if dmax > 0:
+            (R, SR, err, ok), _ = jax.lax.scan(
+                wave, (R, SR, err, ok), wave_xs
+            )
+
+        # -- mixing rows from each node's OWN reconstruction store ----------
+        g_cur = R[jt, iu[:, None], nbr_j]  # (N, A, D)
+        g_prev = R[jtm1, iu[:, None], nbr_j]
+        mix_rows = neighborhood_sum(g_cur, g_prev, wtn_j)
+        mix_rows = jnp.where(t == 0, mix0_j, mix_rows)
+        if verify:
+            s_cur = SR[jt, iu[:, None], nbr_j]
+            s_prev = SR[jtm1, iu[:, None], nbr_j]
+            ok &= (t == 0) | jnp.all(
+                jnp.where(padm_j, (s_cur == t) & (s_prev == t - 1), True)
+            )
+
+        # -- advance all nodes with the shared local update -----------------
+        state = step(state, i_t, mix_rows)
+        DD = DD.at[jt].set(densify_delta(state))
+        nnz_t = jnp.sum(state.dval_prev != 0, axis=-1).astype(jnp.int32)
+        return (state, z1, R, DD, SR, Z, err, ok), (state.z, nnz_t)
+
+    R0 = jnp.zeros((depth, n, n, D), dt)
+    R0 = R0.at[0].set(jnp.broadcast_to(jnp.asarray(z0, dt), (n, n, D)))
+    DD0 = jnp.zeros((depth, n, D), dt)
+    if verify:
+        SR0 = jnp.full((depth, n, n), -(2**30), jnp.int32).at[0].set(0)
+        Z0 = jnp.zeros((depth, n, D), dt).at[0].set(jnp.asarray(z0, dt))
+    else:  # zero-size placeholders keep the carry structure uniform
+        SR0 = jnp.zeros((0,), jnp.int32)
+        Z0 = jnp.zeros((0,), dt)
+    carry0 = (
+        state0,
+        jnp.zeros((n, D), dt),  # z^1, captured at t == 1
+        R0,
+        DD0,
+        SR0,
+        Z0,
+        jnp.zeros((), dt),
+        jnp.ones((), bool),
+    )
+    ts = jnp.arange(steps, dtype=jnp.int32)
+    idx_j = jnp.asarray(indices[:steps], jnp.int32)
+
+    scan = jax.jit(lambda c, x: jax.lax.scan(body, c, x))
+    (_, _, _, _, _, _, err, ok), (zs, nnzs) = scan(carry0, (ts, idx_j))
+
+    if verify and not bool(ok):
+        raise ProtocolViolation(
+            "relay schedule consumed a value before its arrival"
+        )
+    z_trace = np.concatenate([np.asarray(z0)[None], np.asarray(zs)])
+    doubles, ints = _closed_form_costs(
+        np.asarray(nnzs), tb.dist, tail, D
+    )
+    return SparseRunResult(
+        z_trace=z_trace,
+        doubles_received=doubles,
+        ints_received=ints,
+        recon_max_err=float(err) if verify else float("nan"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reference engine — the original per-observer loop (parity oracle). Slow:
+# O(N^2 T) Python-level reconstruct calls and an O(N^2 T D) store.
+# ---------------------------------------------------------------------------
+
+def _run_reference(
+    cfg, data, graph, w, steps, indices, z0=None
+) -> SparseRunResult:
     spec = cfg.spec
     alpha, lam = cfg.alpha, cfg.lam
     n = data.n_nodes
@@ -78,15 +429,7 @@ def run_sparse(
     neighbors = {u: sorted(graph.neighbors(u)) for u in range(n)}
 
     state = init_state(cfg, data, jnp.asarray(z0))
-    idx_j = jnp.asarray(data.idx)
-    val_j = jnp.asarray(data.val)
-    y_j = jnp.asarray(data.y)
-    w_j = jnp.asarray(w, dt)
-    wt_j = jnp.asarray(wt, dt)
-
-    step_fn = jax.jit(
-        lambda st, i_t, mix: dsba_step(cfg, w_j, wt_j, idx_j, val_j, y_j, st, i_t, mix)
-    )
+    step_fn = jax.jit(make_step_fn(cfg, data, w))
 
     # --- per-observer reconstruction stores ---------------------------------
     # recon[u, l, s] = node u's reconstruction of z_l^s (NaN = not yet known)
@@ -182,7 +525,6 @@ def run_sparse(
 
         # ---- advance all nodes with the shared local update ----------------
         i_t = jnp.asarray(indices[t], jnp.int32)
-        prev_table = state.table_g
         state = step_fn(state, i_t, jnp.asarray(mix))
         z_hist[t + 1] = np.asarray(state.z)
         dg_log[t] = np.asarray(state.dg_prev)

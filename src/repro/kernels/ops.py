@@ -57,12 +57,18 @@ def saga_sparse_dot(psi, idx, val, *, use_pallas: str = "auto"):
     return sparse_dot(psi, idx, val, interpret=(m == "interpret"))
 
 
-@partial(jax.jit, static_argnames=("use_pallas",))
-def saga_sparse_axpy(psi, idx, val, coef, rho, *, use_pallas: str = "auto"):
+@partial(
+    jax.jit, static_argnames=("use_pallas", "compute_dtype", "node_block")
+)
+def saga_sparse_axpy(psi, idx, val, coef, rho, *, use_pallas: str = "auto",
+                     compute_dtype=None, node_block: int = 1):
     m = _mode(use_pallas)
     if m == "ref":
         return R.sparse_axpy_ref(psi, idx, val, coef, rho)
-    return sparse_axpy(psi, idx, val, coef, rho, interpret=(m == "interpret"))
+    return sparse_axpy(
+        psi, idx, val, coef, rho, interpret=(m == "interpret"),
+        compute_dtype=compute_dtype or jnp.float32, node_block=node_block,
+    )
 
 
 @partial(jax.jit, static_argnames=("k", "use_pallas"))

@@ -25,12 +25,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _dot_kernel(psi_ref, idx_ref, val_ref, out_ref, *, block_d: int, d: int):
+def _dot_kernel(psi_ref, idx_ref, val_ref, out_ref, *, block_d: int, d: int,
+                compute_dtype):
     """Accumulate sum(val * psi[idx]) for indices landing in this d-block."""
     j = pl.program_id(1)
-    psi = psi_ref[0].astype(jnp.float32)  # (block_d,)
+    psi = psi_ref[0].astype(compute_dtype)  # (block_d,)
     idx = idx_ref[0]  # (k,)
-    val = val_ref[0].astype(jnp.float32)  # (k,)
+    val = val_ref[0].astype(compute_dtype)  # (k,)
     lo = j * block_d
     # ragged last block: out-of-range pad columns read garbage/NaN -> zero
     col = lo + jax.lax.iota(jnp.int32, block_d)
@@ -42,7 +43,7 @@ def _dot_kernel(psi_ref, idx_ref, val_ref, out_ref, *, block_d: int, d: int):
         local[:, None]
         == jax.lax.broadcasted_iota(jnp.int32, (1, block_d), 1)
     ) & in_blk[:, None]
-    gathered = (onehot.astype(jnp.float32) @ psi[:, None])[:, 0]  # (k,)
+    gathered = (onehot.astype(compute_dtype) @ psi[:, None])[:, 0]  # (k,)
     partial = jnp.sum(val * gathered)
 
     @pl.when(j == 0)
@@ -59,13 +60,21 @@ def sparse_dot(
     *,
     block_d: int = 512,
     interpret: bool = False,
+    compute_dtype=jnp.float32,
 ) -> jax.Array:
-    """Per-node sparse dot products: out[n] = sum_k val[n,k] * psi[n, idx[n,k]]."""
+    """Per-node sparse dot products: out[n] = sum_k val[n,k] * psi[n, idx[n,k]].
+
+    compute_dtype: accumulation dtype inside the kernel. float32 is the TPU
+    MXU-native default; pass psi.dtype (e.g. float64 in interpret mode on
+    CPU) when the caller needs bit-exact agreement with a f64 reference.
+    """
     N, D = psi.shape
     k = idx.shape[1]
     block_d = min(block_d, D)
     grid = (N, pl.cdiv(D, block_d))
-    kernel = functools.partial(_dot_kernel, block_d=block_d, d=D)
+    kernel = functools.partial(
+        _dot_kernel, block_d=block_d, d=D, compute_dtype=compute_dtype
+    )
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -75,29 +84,39 @@ def sparse_dot(
             pl.BlockSpec((1, k), lambda n, j: (n, 0)),
         ],
         out_specs=pl.BlockSpec((1,), lambda n, j: (n,)),
-        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((N,), compute_dtype),
         interpret=interpret,
     )(psi, idx.astype(jnp.int32), val)
 
 
 def _axpy_kernel(psi_ref, idx_ref, val_ref, coef_ref, rho_ref, out_ref, *,
-                 block_d: int):
-    """out_block = rho * psi_block + coef * scatter(val at idx) in-block."""
+                 block_d: int, compute_dtype):
+    """out_block = rho * psi_block + coef * scatter(val at idx) in-block.
+
+    Handles a (node_block, block_d) tile: the one-hot match is batched over
+    the node axis, so a single grid cell can cover several nodes (node_block
+    > 1 keeps the interpret-mode grid tiny on CPU).
+    """
     j = pl.program_id(1)
-    psi = psi_ref[0].astype(jnp.float32)
-    idx = idx_ref[0]
-    val = val_ref[0].astype(jnp.float32)
-    coef = coef_ref[0].astype(jnp.float32)
-    rho = rho_ref[0].astype(jnp.float32)
+    psi = psi_ref[...].astype(compute_dtype)  # (nb, block_d)
+    idx = idx_ref[...]  # (nb, k)
+    val = val_ref[...].astype(compute_dtype)
+    coef = coef_ref[...].astype(compute_dtype)  # (nb,)
+    rho = rho_ref[...].astype(compute_dtype)
     lo = j * block_d
     local = idx - lo
     in_blk = (local >= 0) & (local < block_d)
     onehot = (
-        local[:, None]
-        == jax.lax.broadcasted_iota(jnp.int32, (1, block_d), 1)
-    ) & in_blk[:, None]
-    scat = (val[None, :] @ onehot.astype(jnp.float32))[0]  # (block_d,)
-    out_ref[0] = (rho * psi + coef * scat).astype(out_ref.dtype)
+        local[:, :, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_d), 2)
+    ) & in_blk[:, :, None]
+    # batched gather-as-matmul: (nb, k) x (nb, k, block_d) -> (nb, block_d)
+    scat = jnp.einsum(
+        "nk,nkb->nb", val, onehot.astype(compute_dtype),
+        preferred_element_type=compute_dtype,
+    )
+    out = rho[:, None] * psi + coef[:, None] * scat
+    out_ref[...] = out.astype(out_ref.dtype)
 
 
 def sparse_axpy(
@@ -109,24 +128,39 @@ def sparse_axpy(
     *,
     block_d: int = 512,
     interpret: bool = False,
+    compute_dtype=jnp.float32,
+    node_block: int = 1,
 ) -> jax.Array:
-    """out[n] = rho[n] * psi[n] + coef[n] * x_n (sparse row scatter)."""
+    """out[n] = rho[n] * psi[n] + coef[n] * x_n (sparse row scatter).
+
+    compute_dtype: in-kernel arithmetic dtype (see sparse_dot). The output
+    keeps psi.dtype either way.
+    node_block: nodes per grid cell. 1 (default) is the TPU layout; CPU
+    interpret-mode callers pass node_block=N to collapse the grid to a
+    single cell (the emulated grid is a compile-time loop, so a small grid
+    keeps trace/compile time flat).
+    """
     N, D = psi.shape
     k = idx.shape[1]
     block_d = min(block_d, D)
-    grid = (N, pl.cdiv(D, block_d))
-    kernel = functools.partial(_axpy_kernel, block_d=block_d)
+    node_block = min(node_block, N)
+    if N % node_block:
+        raise ValueError(f"node_block={node_block} must divide N={N}")
+    grid = (N // node_block, pl.cdiv(D, block_d))
+    kernel = functools.partial(
+        _axpy_kernel, block_d=block_d, compute_dtype=compute_dtype
+    )
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, block_d), lambda n, j: (n, j)),
-            pl.BlockSpec((1, k), lambda n, j: (n, 0)),
-            pl.BlockSpec((1, k), lambda n, j: (n, 0)),
-            pl.BlockSpec((1,), lambda n, j: (n,)),
-            pl.BlockSpec((1,), lambda n, j: (n,)),
+            pl.BlockSpec((node_block, block_d), lambda n, j: (n, j)),
+            pl.BlockSpec((node_block, k), lambda n, j: (n, 0)),
+            pl.BlockSpec((node_block, k), lambda n, j: (n, 0)),
+            pl.BlockSpec((node_block,), lambda n, j: (n,)),
+            pl.BlockSpec((node_block,), lambda n, j: (n,)),
         ],
-        out_specs=pl.BlockSpec((1, block_d), lambda n, j: (n, j)),
+        out_specs=pl.BlockSpec((node_block, block_d), lambda n, j: (n, j)),
         out_shape=jax.ShapeDtypeStruct((N, D), psi.dtype),
         interpret=interpret,
     )(psi, idx.astype(jnp.int32), val, coef, rho)
