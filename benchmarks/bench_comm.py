@@ -93,7 +93,8 @@ def main():
 
     print("\nprojected per-iteration DOUBLEs at paper-scale datasets "
           "(N=10, ER(0.4) E[deg]~3.6):")
-    print(f"{'dataset':>10} {'d':>9} {'k':>5} {'DSBA-s':>10} {'dense':>12} {'ratio':>8}")
+    print(f"{'dataset':>10} {'d':>9} {'k':>5} {'DSBA-s':>10} "
+          f"{'dense':>12} {'ratio':>8}")
     for name in ("news20", "rcv1", "sector"):
         p = DATASET_PRESETS[name]
         s = sparse_doubles_per_iter(10, p["k"], 0)

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import pathlib
 
-import numpy as np
 
 from repro.core import mixing, reference
 from repro.core.baselines import run_dlm, run_extra, run_ssda

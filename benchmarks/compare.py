@@ -1,0 +1,68 @@
+"""Benchmark regression gate.
+
+    python -m benchmarks.compare BASELINE.json NEW.json [--max-ratio 1.5]
+
+Compares two ``benchmarks.run --json`` payloads entry-by-entry and exits
+non-zero if any shared entry's us_per_call regressed by more than
+``--max-ratio`` x the committed baseline (CI runs this against the
+repo-root ``BENCH_kernels.json``). New entries (no baseline yet) and
+removed entries are reported but never fail the gate — refresh the
+baseline in the same PR that adds or retires a benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def load(path: str) -> dict[str, float]:
+    payload = json.loads(pathlib.Path(path).read_text())
+    if payload.get("schema") != 1:
+        raise SystemExit(f"{path}: unknown benchmark schema "
+                         f"{payload.get('schema')!r}")
+    return {k: float(v) for k, v in payload["entries"].items()}
+
+
+def compare(base: dict[str, float], new: dict[str, float],
+            max_ratio: float) -> list[str]:
+    failures = []
+    for name in sorted(set(base) | set(new)):
+        if name not in base:
+            print(f"NEW      {name}: {new[name]:.1f} us (no baseline)")
+            continue
+        if name not in new:
+            print(f"REMOVED  {name}: baseline {base[name]:.1f} us")
+            continue
+        ratio = new[name] / base[name] if base[name] else float("inf")
+        status = "FAIL" if ratio > max_ratio else "ok"
+        print(f"{status:8} {name}: {base[name]:.1f} -> {new[name]:.1f} us "
+              f"({ratio:.2f}x)")
+        if ratio > max_ratio:
+            failures.append(
+                f"{name}: {ratio:.2f}x > {max_ratio}x "
+                f"({base[name]:.1f} -> {new[name]:.1f} us)"
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="fail when new/baseline exceeds this (default 1.5)")
+    args = ap.parse_args()
+    failures = compare(load(args.baseline), load(args.new), args.max_ratio)
+    if failures:
+        print("\nbenchmark regressions:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nno benchmark regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -124,13 +124,21 @@ def bench_comm_table(rows):
     dt = (time.perf_counter() - t0) * 1e6
     model = sparse_doubles_per_iter(data.n_nodes, data.k, 0)
     ok = (steady == model).all() and res.recon_max_err < 1e-9
-    rows.append(("paper_table1_comm", dt,
-                 f"measured==model({model})={bool(ok)} recon_err={res.recon_max_err:.1e}"))
+    rows.append((
+        "paper_table1_comm", dt,
+        f"measured==model({model})={bool(ok)} "
+        f"recon_err={res.recon_max_err:.1e}",
+    ))
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write {schema, fast, entries: {name: us_per_call}} JSON "
+             "(the format benchmarks/compare.py gates CI regressions on)",
+    )
     args, _ = ap.parse_known_args()
 
     rows: list[tuple[str, float, str]] = []
@@ -143,6 +151,19 @@ def main():
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        import json
+        import pathlib
+
+        payload = {
+            "schema": 1,
+            "fast": bool(args.fast),
+            "entries": {name: round(us, 1) for name, us, _ in rows},
+            "derived": {name: derived for name, _, derived in rows},
+        }
+        pathlib.Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,6 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-import numpy as np
 
 from repro.core import mixing, reference
 from repro.core.baselines import run_dlm, run_extra, run_ssda

@@ -6,7 +6,6 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-import numpy as np
 
 from repro.core import mixing, reference
 from repro.core.dsba import DSBAConfig, run

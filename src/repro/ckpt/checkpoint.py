@@ -105,7 +105,9 @@ def restore_checkpoint(directory, tree_like, step: int | None = None):
         arr = np.load(d / e["file"])
         if tuple(arr.shape) != tuple(np.shape(like)):
             raise ValueError(f"shape mismatch at {p}: {arr.shape} vs {np.shape(like)}")
-        new_leaves.append(jax.numpy.asarray(arr, dtype=like.dtype if hasattr(like, "dtype") else None))
+        new_leaves.append(jax.numpy.asarray(
+            arr, dtype=like.dtype if hasattr(like, "dtype") else None
+        ))
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
 
 

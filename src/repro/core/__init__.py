@@ -2,5 +2,7 @@
 # Aggregation) and its substrate — monotone operators, mixing matrices,
 # baselines, sparse communication, and the pod-axis gossip generalization.
 from repro.core.operators import OperatorSpec  # noqa: F401
-from repro.core.dsba import DSBAConfig, DSBAState, dsba_step, init_state, run  # noqa: F401
+from repro.core.dsba import (  # noqa: F401
+    DSBAConfig, DSBAState, dsba_step, init_state, run,
+)
 from repro.core import mixing, baselines, reference  # noqa: F401

@@ -14,8 +14,6 @@ All methods run on the same mixing matrix W. Dense features per node
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +46,6 @@ def _full_op(spec: OperatorSpec, feats, labels, lam):
 
 def _metrics_loop(step_fn, z_of, state, steps, record_every, z_star):
     iters, dist2, cons = [], [], []
-    jstep = jax.jit(lambda st: st)  # placeholder; step_fn already jitted
     for it in range(1, steps + 1):
         state = step_fn(state)
         if it % record_every == 0 or it == steps:
@@ -181,7 +178,6 @@ def run_ssda(
             )(chol, S + rhs0)
 
     else:
-        G = _full_op(spec, feats, labels, lam)
 
         def conj_grad(S):
             # invert grad f_n via damped Newton with explicit per-node jacobians

@@ -38,18 +38,21 @@ both ppermute-only, scaling O(deg) not O(P): the 1000+ node design point.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core import mixing as MX
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.params import tree_pspecs, tree_sds
+
+if hasattr(jax, "shard_map"):  # jax >= 0.5
+    _shard_map = jax.shard_map
+else:  # jax 0.4.x keeps it under experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
 from repro.optim.adam import adam_init, adam_update
 from repro.train.step import TrainConfig, local_grads
 
@@ -66,6 +69,8 @@ class GossipConfig:
     compression: str = "none"
     topk_ratio: float = 0.01
     block_size: int = 4096  # block_topk selection granularity
+    # kernels/ops.py use_pallas mode for the block_topk selection
+    kernel_mode: str = "auto"
     consensus_lr: float = 0.9  # CHOCO gamma
     seed: int = 0
 
@@ -104,14 +109,17 @@ def topk_compress(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
 
 
 def block_topk_compress(
-    x: jax.Array, ratio: float, block: int
+    x: jax.Array, ratio: float, block: int, *, use_pallas: str = "auto"
 ) -> tuple[jax.Array, jax.Array]:
     """Block-local top-k: k_b = ratio*block entries per `block`-sized chunk.
 
     Linear-time selection (per-block), same fixed-size (values, GLOBAL idx)
-    wire format as topk_compress — kernels/topk_compress.py is the TPU
-    version of the selection.
+    wire format as topk_compress. Selection dispatches through the
+    kernels/ops.py registry ('block_topk'): the Pallas kernel on TPU, the
+    lax.top_k oracle on CPU under 'auto'.
     """
+    from repro.kernels.ops import topk_blocks
+
     n = x.size
     flat = x.reshape(-1)
     block = min(block, n)
@@ -121,8 +129,7 @@ def block_topk_compress(
     nb = flat.size // block
     k_b = max(1, int(block * ratio))
     rows = flat.reshape(nb, block)
-    _, li = jax.lax.top_k(jnp.abs(rows), k_b)  # (nb, k_b) local indices
-    vals = jnp.take_along_axis(rows, li, axis=1)
+    vals, li = topk_blocks(rows, k_b, use_pallas=use_pallas)  # (nb, k_b)
     gi = (li + (jnp.arange(nb) * block)[:, None]).astype(jnp.int32)
     # padded tail indices point past n; zero their values so scatter is a noop
     valid = gi < n
@@ -249,7 +256,7 @@ def make_dense_mix(mesh, gc: GossipConfig, leaf_specs):
     if mesh is None:
         return body
     full_specs = jax.tree_util.tree_map(lambda sp: P("pod", *sp), leaf_specs)
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=mesh, in_specs=(full_specs,), out_specs=full_specs
     )
 
@@ -279,7 +286,8 @@ def make_topk_exchange(mesh, gc: GossipConfig, leaf_specs):
             if gc.compression == "block_topk":
                 vals, idx = jax.vmap(
                     lambda r: block_topk_compress(r, gc.topk_ratio,
-                                                  gc.block_size)
+                                                  gc.block_size,
+                                                  use_pallas=gc.kernel_mode)
                 )(resid)
             else:
                 k = leaf_k(shape, gc.topk_ratio)
@@ -317,7 +325,7 @@ def make_topk_exchange(mesh, gc: GossipConfig, leaf_specs):
         return body
     src_specs = jax.tree_util.tree_map(lambda sp: P("pod", *sp), leaf_specs)
     rec_specs = jax.tree_util.tree_map(lambda sp: P("pod", None, *sp), leaf_specs)
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=mesh,
         in_specs=(src_specs, rec_specs),
         out_specs=(src_specs, rec_specs),

@@ -14,7 +14,6 @@ Erdos-Renyi) for the pod-axis runtime.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 

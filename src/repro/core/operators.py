@@ -29,7 +29,6 @@ datasets); `resolvent_*` take ``xsq = ||x||^2`` anyway for generality.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -132,7 +131,8 @@ def auc_resolvent(s, psi_tail, y, p, a_eff, xsq):
     def mat_pos():
         return jnp.array(
             [
-                [1.0 + 2.0 * beta_p * xsq, -2.0 * beta_p * xsq, 0.0, -2.0 * beta_p * xsq],
+                [1.0 + 2.0 * beta_p * xsq, -2.0 * beta_p * xsq, 0.0,
+                 -2.0 * beta_p * xsq],
                 [-2.0 * beta_p, 1.0 + 2.0 * beta_p, 0.0, 0.0],
                 [0.0, 0.0, 1.0, 0.0],
                 [2.0 * beta_p, 0.0, 0.0, 1.0 + 2.0 * p * (1.0 - p) * a_eff],
@@ -143,7 +143,8 @@ def auc_resolvent(s, psi_tail, y, p, a_eff, xsq):
     def mat_neg():
         return jnp.array(
             [
-                [1.0 + 2.0 * beta_n * xsq, 0.0, -2.0 * beta_n * xsq, 2.0 * beta_n * xsq],
+                [1.0 + 2.0 * beta_n * xsq, 0.0, -2.0 * beta_n * xsq,
+                 2.0 * beta_n * xsq],
                 [0.0, 1.0, 0.0, 0.0],
                 [-2.0 * beta_n, 0.0, 1.0 + 2.0 * beta_n, 0.0],
                 [-2.0 * beta_n, 0.0, 0.0, 1.0 + 2.0 * p * (1.0 - p) * a_eff],

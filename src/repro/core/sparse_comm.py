@@ -43,9 +43,10 @@ pair, so the simulator batches it instead of looping in Python:
   ``doubles[t, u] = sum_l nnz[t - xi(u,l), l] + tail`` (+ the one-time dense
   z^1 flood of D doubles at ``t == xi``), instead of inside the hop loop.
 * **Pallas hot path.** Densifying the per-node sparse deltas is routed
-  through ``kernels.sparse_saga.sparse_axpy`` (one-hot-matmul scatter on the
-  TPU MXU; ``interpret=True`` fallback off-TPU, with ``compute_dtype``
-  matching the trajectory dtype so f64 runs stay bit-exact).
+  through ``kernels.ops.saga_sparse_axpy`` (one-hot-matmul scatter on the
+  TPU MXU; ``interpret=True`` fallback off-TPU). The interpret-mode
+  compute_dtype policy lives in kernels/ops.py — f64 runs stay bit-exact
+  without this module re-deriving the dtype per call site.
 
 ``verify=True`` (debug mode) additionally carries an iterate-tag ring and a
 truth ring through the scan: every read is checked against the availability
@@ -255,9 +256,12 @@ def _run_vectorized(
         base = jnp.zeros((n, D), dt)
         if tail:
             base = base.at[:, d:].set(st.dtail_prev)
+        # compute_dtype is NOT passed: kernels.ops resolves it centrally
+        # (interpret -> psi.dtype, so the f64 relay stays bit-exact;
+        # compiled -> f32). See the sparse_axpy registry policy.
         return saga_sparse_axpy(
             base, st.didx_prev, st.dval_prev, st.dg_prev,
-            jnp.ones((n,), dt), use_pallas=kernel_mode, compute_dtype=dt,
+            jnp.ones((n,), dt), use_pallas=kernel_mode,
             node_block=n if interpret else 1,
         )
 

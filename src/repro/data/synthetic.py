@@ -139,7 +139,8 @@ def make_classification(
 
 
 def from_preset(
-    name: str, task: str = "classification", n_nodes: int = 10, q: int = 100, seed: int = 0
+    name: str, task: str = "classification", n_nodes: int = 10,
+    q: int = 100, seed: int = 0
 ) -> SparseDataset:
     cfg = DATASET_PRESETS[name]
     if task == "regression":

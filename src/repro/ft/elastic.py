@@ -24,7 +24,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mixing as MX
 from repro.core.gossip import GossipConfig
 
 

@@ -4,6 +4,8 @@
 #   sparse_saga      DSBA per-node sparse row update (one-hot-matmul
 #                    gather/scatter — the TPU adaptation, DESIGN.md §5)
 #   topk_compress    block-local top-k for gossip delta streams
-# Each kernel: <name>.py (pl.pallas_call + BlockSpec); ops.py has jit'd
-# wrappers with backend dispatch; ref.py the pure-jnp oracles
-# (tests/test_kernels.py sweeps shapes/dtypes in interpret mode).
+# Each kernel: <name>.py (pl.pallas_call + BlockSpec); ops.py is the
+# backend REGISTRY (KernelSpec: pallas/interpret/ref impls + per-kernel
+# tolerance policy + the parity_check harness) plus jit'd public wrappers;
+# ref.py the pure-jnp oracles (tests/test_kernels.py sweeps shapes/dtypes
+# in interpret mode; tests/test_ops_dispatch.py sweeps the registry).

@@ -1,4 +1,4 @@
-"""Pallas TPU flash attention (fwd): GQA + causal + sliding window + softcap.
+"""Pallas TPU flash attention: GQA + causal + sliding window + softcap.
 
 Blocked online-softmax attention — the S x S score matrix never
 materializes; the working set is one (block_q, head_dim) query tile plus
@@ -9,8 +9,18 @@ head h -> kv head h // group_size, so no K/V replication is staged.
 Layout: q (B, Hq, S, D), k/v (B, Hkv, S, D) — heads-major so a (S, D) tile
 per head streams contiguously from HBM.
 
+K/V streaming uses the current Pallas ref-indexing semantics
+(``ref[0, 0, pl.ds(start, size), :]``); ragged sequence lengths are handled
+by padding q/k/v to block multiples in the wrapper (zero pad + in-kernel
+validity masks), so no dynamic slice ever reads out of bounds.
+
+The forward kernel also emits the per-row log-sum-exp, which
+``flash_attention`` (a ``jax.custom_vjp``) saves as a residual: the backward
+pass reconstructs the probabilities from (q, k, v, o, lse) directly instead
+of re-running a reference forward under autodiff.
+
 Validated against kernels/ref.py in interpret mode (tests/test_kernels.py);
-the bwd pass recomputes through the reference path (ops.flash_attention).
+dispatch and tolerance policy live in kernels/ops.py.
 """
 from __future__ import annotations
 
@@ -25,13 +35,14 @@ NEG_INF = -1e30
 
 
 def _attn_kernel(
-    q_ref, k_ref, v_ref, o_ref, *,
+    q_ref, k_ref, v_ref, o_ref, lse_ref, *,
     block_q: int, block_k: int, seq_k: int, causal: bool,
     window: int | None, softcap: float | None, scale: float,
 ):
     """One (batch, q-head, q-block) program instance.
 
-    q_ref: (block_q, D); k_ref/v_ref: (seq_k, D); o_ref: (block_q, D).
+    q_ref: (1, 1, block_q, D); k_ref/v_ref: (1, 1, seq_k_pad, D);
+    o_ref: (1, 1, block_q, D); lse_ref: (1, 1, block_q).
     """
     q_blk = pl.program_id(2)
     q = q_ref[0, 0].astype(jnp.float32) * scale  # (block_q, D)
@@ -42,19 +53,15 @@ def _attn_kernel(
 
     def body(i, carry):
         acc, m_prev, l_prev = carry
-        # pl.load (not ref[...]): its OOB-read semantics on the ragged last
-        # block are well-defined here and masked below; the ref[] indexing
-        # path miscompiles the padded tail in interpret mode.
-        k_tile = pl.load(
-            k_ref, (0, 0, pl.dslice(i * block_k, block_k), slice(None))
-        ).astype(jnp.float32)
-        v_tile = pl.load(
-            v_ref, (0, 0, pl.dslice(i * block_k, block_k), slice(None))
-        ).astype(jnp.float32)
+        # seq_k_pad is a multiple of block_k (wrapper zero-pads), so the
+        # dynamic slice is always in bounds; pad rows are masked below.
+        k_tile = k_ref[0, 0, pl.ds(i * block_k, block_k), :].astype(
+            jnp.float32
+        )
+        v_tile = v_ref[0, 0, pl.ds(i * block_k, block_k), :].astype(
+            jnp.float32
+        )
         k_pos = i * block_k + jax.lax.iota(jnp.int32, block_k)
-        valid = (k_pos < seq_k)[:, None]
-        k_tile = jnp.where(valid, k_tile, 0.0)  # OOB pad rows -> 0, not NaN
-        v_tile = jnp.where(valid, v_tile, 0.0)
         s = q @ k_tile.T  # (block_q, block_k)
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
@@ -88,7 +95,16 @@ def _attn_kernel(
     if window is not None:
         lo = jnp.maximum(0, (q_blk * block_q - window) // block_k)
     acc, m, l = jax.lax.fori_loop(lo, hi, body, (acc0, m0, l0))
-    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    l_safe = jnp.maximum(l, 1e-30)
+    o_ref[0, 0] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[0, 0] = m + jnp.log(l_safe)
+
+
+def _pad_seq(x: jax.Array, to: int) -> jax.Array:
+    pad = (-x.shape[2]) % to
+    if not pad:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
 
 
 def flash_attention_fwd(
@@ -102,7 +118,9 @@ def flash_attention_fwd(
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = False,
-) -> jax.Array:
+    return_lse: bool = False,
+):
+    """Forward kernel launch. Returns o, or (o, lse (B, Hq, S) f32)."""
     B, Hq, S, D = q.shape
     _, Hkv, Sk, _ = k.shape
     assert Hq % Hkv == 0
@@ -111,20 +129,105 @@ def flash_attention_fwd(
     block_q = min(block_q, S)
     block_k = min(block_k, Sk)
 
-    grid = (B, Hq, pl.cdiv(S, block_q))
+    # zero-pad ragged sequences to block multiples: every q block and every
+    # streamed K/V slice is full-sized, and validity is a mask, not an OOB
+    # read (padded q rows are fully masked -> finite garbage, sliced off).
+    qp = _pad_seq(q, block_q)
+    kp = _pad_seq(k, block_k)
+    vp = _pad_seq(v, block_k)
+    Sp, Skp = qp.shape[2], kp.shape[2]
+
+    grid = (B, Hq, Sp // block_q)
     kernel = functools.partial(
         _attn_kernel, block_q=block_q, block_k=block_k, seq_k=Sk,
         causal=causal, window=window, softcap=softcap, scale=scale,
     )
-    return pl.pallas_call(
+    o, lse = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, Sk, D), lambda b, h, i: (b, h // group, 0, 0)),
-            pl.BlockSpec((1, 1, Sk, D), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, Skp, D), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, Skp, D), lambda b, h, i: (b, h // group, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, Sp, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Hq, Sp), jnp.float32),
+        ],
         interpret=interpret,
-    )(q, k, v)
+    )(qp, kp, vp)
+    o = o[:, :, :S]
+    if return_lse:
+        return o, lse[:, :, :S]
+    return o
+
+
+# ---------------------------------------------------------------------------
+# custom VJP: forward = the Pallas kernel (saving lse), backward = the
+# standard flash-attention gradient reconstructed from saved residuals.
+# The score/mask semantics come from kernels/ref.py attention_scores — the
+# single definition shared with the oracle, so forward and gradient cannot
+# drift apart.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(
+    q, k, v, causal=True, window=None, softcap=None,
+    block_q=128, block_k=128, interpret=False,
+):
+    """Differentiable flash attention (positional statics for custom_vjp)."""
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+def _fa_fwd(q, k, v, causal, window, softcap, block_q, block_k, interpret):
+    o, lse = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+        return_lse=True,
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(causal, window, softcap, block_q, block_k, interpret, res, do):
+    from repro.kernels.ref import attention_scores
+
+    q, k, v, o, lse = res
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    s, mask = attention_scores(q, k, causal=causal, window=window,
+                               softcap=softcap)
+    grp = lambda x: x.reshape(B, Hkv, g, *x.shape[2:]).astype(jnp.float32)
+    do_g, o_g, lse_g = grp(do), grp(o), grp(lse)
+
+    # p = softmax reconstructed exactly from the saved log-sum-exp
+    p = jnp.where(
+        mask[None, None, None], jnp.exp(s - lse_g[..., None]), 0.0
+    )
+    dv = jnp.einsum("bkgst,bkgsd->bktd", p, do_g)
+    dp = jnp.einsum("bkgsd,bktd->bkgst", do_g, v.astype(jnp.float32))
+    delta = jnp.sum(do_g * o_g, axis=-1)  # rowsum(do * o)
+    ds = p * (dp - delta[..., None])
+    if softcap is not None:
+        ds = ds * (1.0 - jnp.square(s / softcap))  # d softcap*tanh(x/softcap)
+    dq = scale * jnp.einsum("bkgst,bktd->bkgsd", ds, k.astype(jnp.float32))
+    dk = scale * jnp.einsum("bkgst,bkgsd->bktd", ds,
+                            q.reshape(B, Hkv, g, S, D).astype(jnp.float32))
+    return (
+        dq.reshape(B, Hq, S, D).astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+    )
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -7,15 +7,21 @@ import jax
 import jax.numpy as jnp
 
 
-def attention_ref(
+def attention_scores(
     q: jax.Array,  # (B, Hq, S, D)
     k: jax.Array,  # (B, Hkv, Sk, D)
-    v: jax.Array,
     *,
     causal: bool = True,
     window: int | None = None,
     softcap: float | None = None,
-) -> jax.Array:
+) -> tuple[jax.Array, jax.Array]:
+    """THE definition of the attention score semantics: grouped-GQA
+    (B, Hkv, g, S, Sk) f32 scores (scaled, softcapped) + (S, Sk) bool mask.
+
+    Shared by the oracle forward below and the flash-attention custom_vjp
+    backward (kernels/flash_attention.py), so a semantics change cannot
+    drift between the forward and its gradient.
+    """
     B, Hq, S, D = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
     g = Hq // Hkv
@@ -30,6 +36,21 @@ def attention_ref(
         mask &= qp[:, None] >= kp[None, :]
     if window is not None:
         mask &= qp[:, None] - kp[None, :] < window
+    return s, mask
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    s, mask = attention_scores(q, k, causal=causal, window=window,
+                               softcap=softcap)
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
@@ -50,8 +71,11 @@ def ssd_chunk_ref(xdt, cum, Bc, Cc):
 
 
 def sparse_dot_ref(psi, idx, val):
+    # f32 floor matches the TPU kernel's MXU accumulation; f64 inputs stay
+    # f64 so the interpret-mode parity policy (1e-12) is meetable
+    ct = jnp.promote_types(psi.dtype, jnp.float32)
     return jax.vmap(lambda p, i, v: jnp.sum(v * p[i]))(
-        psi.astype(jnp.float32), idx, val.astype(jnp.float32)
+        psi.astype(ct), idx, val.astype(ct)
     )
 
 

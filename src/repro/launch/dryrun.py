@@ -51,14 +51,14 @@ def _serve_fn(cfg: ModelConfig):
 def build_cell(cfg: ModelConfig, shape_name: str, mesh, multi_pod: bool,
                gossip_kw: dict | None = None, microbatches: int = 1):
     """Returns (jitted_fn, example_args_sds) ready to .lower()."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding
 
     from repro.core.gossip import (
         GossipConfig, gossip_batch_specs, gossip_state_defs,
         make_gossip_train_step,
     )
     from repro.train.step import (
-        TrainConfig, batch_specs, make_train_state_defs, train_step,
+        TrainConfig, make_train_state_defs, train_step,
     )
 
     from repro.models.params import shardable_pspecs
@@ -167,7 +167,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             t2 = time.time()
             mem = compiled.memory_analysis()
             print(compiled.memory_analysis())  # proves it fits
-            cost = compiled.cost_analysis()
+            cost = H.xla_cost_analysis(compiled)
             print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
             hlo_text = compiled.as_text()
             if hlo_path is not None:

@@ -58,6 +58,20 @@ _NO_BYTES = {
     "opt-barrier", "domain", "partition-id", "replica-id", "iota",
 }
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across the JAX API drift.
+
+    Older jaxlibs return a dict; current ones (>= 0.4.34) return a list with
+    one properties dict per executable program. Callers always want the
+    entry program's dict — indexing the list with a string key was the
+    failure mode this wraps.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 # tuple types contain /*index=N*/ comments (with '=') but never nested
 # parens, so the tuple branch is "anything but parens"

@@ -14,7 +14,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ALIASES, get_config, get_reduced
 from repro.models import transformer as T

@@ -112,7 +112,6 @@ def cache_specs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict:
         if shard_len
         else None
     )
-    b = P(*( (None,) + ((baxes,) if baxes else (None,)) ))
     kvspec = lambda: {
         "k": P(None, baxes if baxes else None, laxes, "model", None),
         "v": P(None, baxes if baxes else None, laxes, "model", None),

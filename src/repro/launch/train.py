@@ -13,7 +13,6 @@ collective/compute overlap on TPU.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 import time
 

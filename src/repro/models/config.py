@@ -85,6 +85,12 @@ class ModelConfig:
     # perf options (EXPERIMENTS.md §Perf; defaults = naive baseline)
     blockwise_attention: bool = False  # online-softmax, no S x S buffer
     attention_block_k: int = 1024
+    # route full-sequence self-attention through the kernels/ops.py backend
+    # registry: 'jnp' = the sharded einsum path below (default), otherwise a
+    # use_pallas mode ('auto'|'on'|'interpret'|'off') handed to
+    # ops.flash_attention (custom_vjp Pallas kernel on TPU, jnp oracle on
+    # CPU under 'auto'). Decode/cross/traced-window paths stay on 'jnp'.
+    attention_kernel: str = "jnp"
     # shard attention compute by Q heads (n_heads) instead of KV heads:
     # GQA models with kv_heads < mesh 'model' size otherwise replicate the
     # whole attention computation across the model axis. Expands K/V per

@@ -10,8 +10,6 @@ is by config — the CPU dry-run and numerics tests use this path.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -215,32 +213,50 @@ def multi_head_attention(
     elif cache is not None:
         new_cache = cache
 
-    # GQA grouping
-    G = cfg.n_heads // cfg.n_kv_heads
-    if cfg.shard_q_heads and G > 1:
-        # expand K/V per group so the attention einsum is sharded by Q
-        # heads ('heads' -> model) instead of replicated when
-        # kv_heads < |model| (per-device KV bytes unchanged: the expansion
-        # is sharded away)
-        k = jnp.repeat(k, G, axis=2)
-        v = jnp.repeat(v, G, axis=2)
-        k = shard_act(k, "batch", "seq", "heads", None)
-        v = shard_act(v, "batch", "seq", "heads", None)
-        qg = q.reshape(B, q.shape[1], cfg.n_heads, 1, cfg.head_dim)
-        qg = shard_act(qg, "batch", "seq", "heads", None, None)
-    else:
-        k = shard_act(k, "batch", "seq", "kv_heads", None)
-        v = shard_act(v, "batch", "seq", "kv_heads", None)
-        qg = q.reshape(B, q.shape[1], cfg.n_kv_heads, G, cfg.head_dim)
-        qg = shard_act(qg, "batch", "seq", "kv_heads", None, None)
-    scale = cfg.head_dim ** -0.5
-
-    q_pos_row = positions[0] if cache is None else (
-        jnp.arange(S) + (cache["pos"] if kv_x is None else 0)
+    use_kernel = (
+        cfg.attention_kernel != "jnp" and cache is None and kv_x is None
+        and _traced_window is None and not cfg.blockwise_attention
     )
-    k_pos_row = kv_pos[0]
+    if not use_kernel:
+        # GQA grouping
+        G = cfg.n_heads // cfg.n_kv_heads
+        if cfg.shard_q_heads and G > 1:
+            # expand K/V per group so the attention einsum is sharded by Q
+            # heads ('heads' -> model) instead of replicated when
+            # kv_heads < |model| (per-device KV bytes unchanged: the
+            # expansion is sharded away)
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+            k = shard_act(k, "batch", "seq", "heads", None)
+            v = shard_act(v, "batch", "seq", "heads", None)
+            qg = q.reshape(B, q.shape[1], cfg.n_heads, 1, cfg.head_dim)
+            qg = shard_act(qg, "batch", "seq", "heads", None, None)
+        else:
+            k = shard_act(k, "batch", "seq", "kv_heads", None)
+            v = shard_act(v, "batch", "seq", "kv_heads", None)
+            qg = q.reshape(B, q.shape[1], cfg.n_kv_heads, G, cfg.head_dim)
+            qg = shard_act(qg, "batch", "seq", "kv_heads", None, None)
+        scale = cfg.head_dim ** -0.5
 
-    if cfg.blockwise_attention:
+        q_pos_row = positions[0] if cache is None else (
+            jnp.arange(S) + (cache["pos"] if kv_x is None else 0)
+        )
+        k_pos_row = kv_pos[0]
+
+    if use_kernel:
+        # Registry-dispatched flash attention (kernels/ops.py): heads-major
+        # (B, H, S, D) layout, GQA via the kernel's head->kv_head index map,
+        # custom_vjp backward. Full-sequence self-attention only (positions
+        # here are arange(S) for every no-cache caller).
+        from repro.kernels import ops as KO
+
+        o = KO.flash_attention(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2), causal=causal, window=window,
+            softcap=cfg.attn_softcap, use_pallas=cfg.attention_kernel,
+        )
+        out = jnp.swapaxes(o, 1, 2).astype(dt)  # (B, S, H, Dh)
+    elif cfg.blockwise_attention:
         out = _blockwise_attention(
             qg * scale, k, v, q_pos_row, k_pos_row,
             causal=causal and kv_x is None, window=window,

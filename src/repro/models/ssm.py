@@ -240,7 +240,9 @@ def ssm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
         "state": jax.ShapeDtypeStruct(
             (batch, cfg.ssm_heads, ds, cfg.ssm_head_dim), jnp.float32
         ),
-        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv_width - 1, C), cfg.compute_dtype),
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_conv_width - 1, C), cfg.compute_dtype
+        ),
     }
 
 

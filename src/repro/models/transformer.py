@@ -21,8 +21,6 @@ Public API:
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
@@ -117,15 +115,18 @@ def _remat(cfg: ModelConfig, fn):
     return jax.checkpoint(fn)
 
 
-def _window_schedule(cfg: ModelConfig) -> jnp.ndarray:
-    """Per-layer sliding window; -1 = global. gemma2: odd layers global."""
+def _window_schedule(cfg: ModelConfig) -> jnp.ndarray | None:
+    """Per-layer sliding window for the scan, or None when uniform.
+
+    gemma2-style alternation (odd layers global, -1) needs a traced
+    per-layer scalar threaded through the scan; every other schedule is
+    uniform and stays STATIC (None here; _scan_stack then applies
+    cfg.sliding_window at trace time)."""
     if cfg.local_global and cfg.sliding_window:
-        w = [cfg.sliding_window if i % 2 == 0 else -1 for i in range(cfg.n_layers)]
-    elif cfg.sliding_window:
-        w = [cfg.sliding_window] * cfg.n_layers
-    else:
-        w = [-1] * cfg.n_layers
-    return jnp.asarray(w, jnp.int32)
+        w = [cfg.sliding_window if i % 2 == 0 else -1
+             for i in range(cfg.n_layers)]
+        return jnp.asarray(w, jnp.int32)
+    return None
 
 
 def _embed(cfg: ModelConfig, params, tokens=None, inputs_embeds=None):
@@ -150,9 +151,14 @@ def _unembed(cfg: ModelConfig, params, x):
 # ---------------------------------------------------------------------------
 
 def _dense_block(cfg: ModelConfig, p, x, positions, window, cache):
+    # `window` is either static (None / python int — uniform schedules, so
+    # the mask folds at trace time and kernel routing stays eligible) or a
+    # traced per-layer scalar from the scanned gemma2-style schedule.
+    static = window is None or isinstance(window, int)
     h, new_cache = L.multi_head_attention(
         cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
-        causal=True, window=None, cache=cache, _traced_window=window,
+        causal=True, window=window if static else None, cache=cache,
+        _traced_window=None if static else window,
     )
     x = x + h
     inner = L.rms_norm(x, p["ln2"], cfg.norm_eps)
@@ -173,30 +179,37 @@ def _ssm_layer(cfg: ModelConfig, p, x, cache):
 def _scan_stack(cfg, blocks, x, positions, windows, caches):
     """Scan over stacked layer params (+ per-layer window + optional cache).
 
+    windows=None means a uniform schedule: every layer gets the STATIC
+    cfg.sliding_window instead of threading a traced per-layer scalar
+    through the scan (mask folds at trace time; kernel routing eligible).
     caches['pos'] is a scalar shared by all layers, so it rides in the
     closure; only the stacked k/v tensors are scanned.
     """
     has_cache = caches is not None
     pos = caches["pos"] if has_cache else None
+    uniform = windows is None
 
     def body(carry, xs):
         x = carry
         if has_cache:
-            p, w, k, v = xs
+            (p, k, v) = xs if uniform else (xs[0], xs[2], xs[3])
+            w = cfg.sliding_window if uniform else xs[1]
             x, new_c = _dense_block(
                 cfg, p, x, positions, w, {"k": k, "v": v, "pos": pos}
             )
             return x, (new_c["k"], new_c["v"])
-        p, w = xs
+        p = xs[0]
+        w = cfg.sliding_window if uniform else xs[1]
         x, _ = _dense_block(cfg, p, x, positions, w, None)
         return x, None
 
     body = _remat(cfg, body)
     if has_cache:
-        xs = (blocks, windows, caches["k"], caches["v"])
+        xs = ((blocks, caches["k"], caches["v"]) if uniform
+              else (blocks, windows, caches["k"], caches["v"]))
         x, (nk, nv) = jax.lax.scan(body, x, xs)
         return x, {"k": nk, "v": nv, "pos": pos + positions.shape[1]}
-    x, _ = jax.lax.scan(body, x, (blocks, windows))
+    x, _ = jax.lax.scan(body, x, (blocks,) if uniform else (blocks, windows))
     return x, None
 
 
@@ -272,8 +285,7 @@ def _hybrid_forward(cfg, params, x, positions, caches):
                 "pos": caches["attn"]["pos"],
             }
             x, nca = _dense_block(
-                cfg, params["shared_attn"], x, positions,
-                jnp.asarray(-1, jnp.int32), ca,
+                cfg, params["shared_attn"], x, positions, None, ca,
             )
             if caches is not None:
                 new_attn_caches.append(nca)

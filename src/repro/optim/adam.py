@@ -8,7 +8,7 @@ schedule is a plain callable step -> lr.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -71,8 +71,9 @@ def adam_update(cfg: AdamConfig, params, grads, opt_state, step):
 
     if cfg.kind == "sgdm":
         pairs = jax.tree_util.tree_map(upd, params, grads, opt_state["mu"])
-        new_p = jax.tree_util.tree_map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
-        new_mu = jax.tree_util.tree_map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        is_pair = lambda x: isinstance(x, tuple)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], pairs, is_leaf=is_pair)
+        new_mu = jax.tree_util.tree_map(lambda t: t[1], pairs, is_leaf=is_pair)
         return new_p, {"mu": new_mu}, {"grad_norm": gnorm, "lr": lr}
 
     triples = jax.tree_util.tree_map(

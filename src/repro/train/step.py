@@ -8,7 +8,6 @@ The multi-pod decentralized step lives in core/gossip.py and reuses
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """Checkpointing: round-trip, atomic commit, async write, exact resume."""
 import dataclasses
-import threading
 
 import jax
 import jax.numpy as jnp

@@ -41,7 +41,7 @@ SCRIPT = textwrap.dedent(
     with mesh, use_constraint_mesh(mesh):
         fn, sds = build_cell(cfg, shape, mesh, multi)
         compiled = fn.lower(*sds).compile()
-        cost = compiled.cost_analysis()
+        cost = H.xla_cost_analysis(compiled)
         colls = H.collective_stats(compiled.as_text())
     print(json.dumps({
         "flops": float(cost.get("flops", 0)),

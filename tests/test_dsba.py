@@ -1,5 +1,4 @@
 """End-to-end convergence of DSBA (Algorithm 1) and Remark 5.1 degeneracies."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

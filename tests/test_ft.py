@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.core.gossip import (
-    GossipConfig, consensus_distance, init_gossip_state,
+    GossipConfig, init_gossip_state,
     make_gossip_train_step,
 )
 from repro.data.sharded_loader import LoaderConfig, ShardedTokenLoader, batch_at

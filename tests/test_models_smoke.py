@@ -122,3 +122,34 @@ def test_param_count_analytic_close_to_actual():
         assert abs(actual - analytic) / actual < 0.15, (
             arch, actual, analytic
         )
+
+
+@pytest.mark.parametrize("arch", ["minitron_8b", "whisper_small"])
+def test_attention_kernel_routing_matches_jnp(arch):
+    """cfg.attention_kernel routes full-seq self-attention through the
+    kernels/ops.py registry; 'off' (jnp oracle) and 'interpret' (Pallas
+    interpreter) must match the in-layer einsum path."""
+    import dataclasses
+
+    cfg, params = _make(arch)
+    tokens, kwargs = _inputs(cfg, batch=1, seq=12)
+    # at f32 compute dtype the registry's oracle path and the in-layer
+    # einsum path are the same math in the same dtype: exact agreement
+    # (bf16 differs legitimately — the kernel path keeps attention in f32)
+    cfg32 = dataclasses.replace(cfg, compute_dtype=jnp.float32)
+    base = T.forward(cfg32, params, tokens, **kwargs)
+    ref = T.forward(
+        dataclasses.replace(cfg32, attention_kernel="off"), params, tokens,
+        **kwargs,
+    )
+    np.testing.assert_allclose(
+        np.asarray(ref), np.asarray(base), rtol=1e-6, atol=1e-6
+    )
+    # oracle vs the Pallas interpreter through the same routing
+    interp = T.forward(
+        dataclasses.replace(cfg32, attention_kernel="interpret"), params,
+        tokens, **kwargs,
+    )
+    np.testing.assert_allclose(
+        np.asarray(interp), np.asarray(ref), rtol=1e-4, atol=1e-4
+    )

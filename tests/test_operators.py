@@ -11,7 +11,6 @@ from repro.core.operators import (
     OperatorSpec,
     logistic_coeff,
     logistic_coeff_prime,
-    ridge_coeff,
 )
 
 SPECS = {

@@ -1,5 +1,4 @@
 """Mamba2/SSD correctness: chunked scan == naive sequential recurrence."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
