@@ -1,12 +1,19 @@
 """Benchmark harness — one entry per paper table/figure + system benches.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--bench-group G]
 
 Prints `name,us_per_call,derived` CSV rows. Convergence/communication
 benchmarks reproduce the paper's experiments (Figures 1-3, Table 1); kernel
 and step benches time this framework's hot paths on CPU (reference path —
 TPU wall-clock is out of scope for this container; see EXPERIMENTS.md
-§Roofline for the TPU performance model).
+§Roofline for the TPU performance model). The `*_bwd` entries time the
+training-path gradients (jax.grad through the same reference paths as
+their forward twins).
+
+--bench-group picks which families run (docs/benchmarks.md):
+  kernels      dsba step + kernel fwd/bwd + gossip step (the CI gate grid)
+  convergence  the paper's convergence/communication tables
+  all          both (default)
 """
 from __future__ import annotations
 
@@ -66,6 +73,16 @@ def bench_kernels(rows, fast):
     flops = 4 * B * Hq * S * S * D / 2
     rows.append((f"attention_ref_S{S}", us, f"{flops / us / 1e3:.1f} GFLOP/s"))
 
+    # training path: fwd + bwd through the same reference attention (the
+    # gradient oracle the blocked Pallas bwd kernels are parity-checked
+    # against; TPU kernel wall-clock is out of scope on CPU)
+    fb = jax.jit(jax.grad(
+        lambda q, k, v: jnp.sum(R.attention_ref(q, k, v, causal=True)),
+        argnums=(0, 1, 2),  # dq AND dk/dv — argnums=0 would let XLA prune them
+    ))
+    us = timeit(fb, q, k, v, n=3)
+    rows.append((f"attention_bwd_S{S}", us, f"{3 * flops / us / 1e3:.1f} GFLOP/s"))
+
     from repro.models.ssm import _ssd_chunked
     Bz, Ssz, nh, hd, ds = 1, 1024, 8, 64, 64
     xh = jax.random.normal(ks[0], (Bz, Ssz, nh, hd))
@@ -75,6 +92,13 @@ def bench_kernels(rows, fast):
     f = jax.jit(lambda *a: _ssd_chunked(*a, 256)[0])
     us = timeit(f, xh, dt, al, Bc, Bc, n=3)
     rows.append((f"ssd_chunked_S{Ssz}", us, f"nh={nh} ds={ds}"))
+
+    fb = jax.jit(jax.grad(
+        lambda xh, Bc: jnp.sum(_ssd_chunked(xh, dt, al, Bc, Bc, 256)[0]),
+        argnums=(0, 1),
+    ))
+    us = timeit(fb, xh, Bc, n=3)
+    rows.append((f"ssd_chunked_bwd_S{Ssz}", us, f"nh={nh} ds={ds}"))
 
 
 def bench_gossip(rows):
@@ -135,6 +159,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument(
+        "--bench-group", choices=("kernels", "convergence", "all"),
+        default="all",
+        help="kernels = dsba/kernel-fwd+bwd/gossip timings (what CI gates); "
+             "convergence = the paper's convergence + communication tables",
+    )
+    ap.add_argument(
         "--json", default=None, metavar="PATH",
         help="also write {schema, fast, entries: {name: us_per_call}} JSON "
              "(the format benchmarks/compare.py gates CI regressions on)",
@@ -142,11 +172,13 @@ def main():
     args, _ = ap.parse_known_args()
 
     rows: list[tuple[str, float, str]] = []
-    bench_dsba_step(rows)
-    bench_kernels(rows, args.fast)
-    bench_gossip(rows)
-    bench_comm_table(rows)
-    bench_convergence_tables(rows, args.fast)
+    if args.bench_group in ("kernels", "all"):
+        bench_dsba_step(rows)
+        bench_kernels(rows, args.fast)
+        bench_gossip(rows)
+    if args.bench_group in ("convergence", "all"):
+        bench_comm_table(rows)
+        bench_convergence_tables(rows, args.fast)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:

@@ -81,6 +81,15 @@ class ProtocolViolation(AssertionError):
 
 @dataclasses.dataclass
 class SparseRunResult:
+    """What `run_sparse` returns — the module's output contract.
+
+    z_trace is the TRUE trajectory (identical across engines and to a dense
+    `core.dsba.run` with the same index stream — pinned by parity tests);
+    doubles/ints are the paper's C_max message accounting (doubles exclude
+    index ints by convention); recon_max_err is nan unless `verify=True`
+    (the fast path does not carry the truth ring).
+    """
+
     z_trace: np.ndarray  # (T+1, N, D)   true trajectory (z^0 .. z^T)
     doubles_received: np.ndarray  # (T, N) cumulative DOUBLEs per node
     ints_received: np.ndarray  # (T, N) cumulative index ints per node

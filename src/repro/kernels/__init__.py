@@ -1,11 +1,19 @@
-# Pallas TPU kernels for the paper's and substrate's compute hot-spots:
-#   flash_attention  GQA/causal/window/softcap online-softmax attention
-#   ssd_scan         Mamba2/SSD within-chunk compute (MXU blocking)
-#   sparse_saga      DSBA per-node sparse row update (one-hot-matmul
-#                    gather/scatter — the TPU adaptation, DESIGN.md §5)
-#   topk_compress    block-local top-k for gossip delta streams
-# Each kernel: <name>.py (pl.pallas_call + BlockSpec); ops.py is the
-# backend REGISTRY (KernelSpec: pallas/interpret/ref impls + per-kernel
-# tolerance policy + the parity_check harness) plus jit'd public wrappers;
-# ref.py the pure-jnp oracles (tests/test_kernels.py sweeps shapes/dtypes
-# in interpret mode; tests/test_ops_dispatch.py sweeps the registry).
+"""Pallas TPU kernels for the paper's and substrate's compute hot-spots.
+
+  flash_attention  GQA/causal/window/softcap online-softmax attention,
+                   custom_vjp with blocked backward kernels (dq + dk/dv
+                   tiles recomputed from the saved log-sum-exp)
+  ssd_scan         Mamba2/SSD within-chunk compute (MXU blocking),
+                   custom_vjp with a chunked backward kernel
+  sparse_saga      DSBA per-node sparse row update (one-hot-matmul
+                   gather/scatter — the TPU adaptation, DESIGN.md §5)
+  topk_compress    block-local top-k for gossip delta streams
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec); ops.py is the backend
+REGISTRY (KernelSpec: pallas/interpret/ref impls + per-kernel forward AND
+gradient tolerance policies + the parity_check harness) plus jit'd public
+wrappers; ref.py the pure-jnp oracles whose autodiff is also the gradient
+ground truth (tests/test_kernels.py sweeps shapes/dtypes in interpret mode;
+tests/test_ops_dispatch.py sweeps the registry; tests/test_kernel_grads.py
+sweeps the vjps). See docs/kernels.md for the authoring guide.
+"""

@@ -15,12 +15,25 @@ by padding q/k/v to block multiples in the wrapper (zero pad + in-kernel
 validity masks), so no dynamic slice ever reads out of bounds.
 
 The forward kernel also emits the per-row log-sum-exp, which
-``flash_attention`` (a ``jax.custom_vjp``) saves as a residual: the backward
-pass reconstructs the probabilities from (q, k, v, o, lse) directly instead
-of re-running a reference forward under autodiff.
+``flash_attention`` (a ``jax.custom_vjp``) saves as a residual.
 
-Validated against kernels/ref.py in interpret mode (tests/test_kernels.py);
-dispatch and tolerance policy live in kernels/ops.py.
+Residual contract: the forward saves (q, k, v, o, lse) and NOTHING that is
+O(S^2). The backward is the blocked flash-attention gradient — two Pallas
+kernels that recompute the probabilities per (q-block, kv-block) TILE from
+the saved log-sum-exp (p = exp(s - lse)), so no S x S probability matrix
+ever materializes in either direction:
+
+  dq kernel   grid (B, Hq, q-blocks): holds one dq tile, streams K/V
+  dk/dv kernel  grid (B, Hq, kv-blocks): holds one dk/dv tile, streams
+              Q/dO/lse/delta; per-q-head partials are group-summed into
+              kv heads by the wrapper (GQA)
+
+delta = rowsum(dO * O) — the softmax-gradient row correction — is a cheap
+O(S) jnp precomputation shared by both kernels.
+
+Validated against kernels/ref.py in interpret mode (tests/test_kernels.py,
+tests/test_kernel_grads.py asserts vjp==ref-autodiff and the no-S^2
+property); dispatch and tolerance policy live in kernels/ops.py.
 """
 from __future__ import annotations
 
@@ -167,11 +180,232 @@ def flash_attention_fwd(
 
 
 # ---------------------------------------------------------------------------
+# blocked backward kernels
+#
+# Both recompute the (block_q, block_k) probability tile from the saved lse
+# (p = exp(s - lse); masked entries are NEG_INF before the subtraction, so
+# they reconstruct to exactly 0 — including the zero-padded rows, whose
+# padded lse of 0 is never reached by a live probability). The score/mask
+# semantics mirror the forward kernel body above tile for tile, so the
+# gradient cannot drift from the forward.
+# ---------------------------------------------------------------------------
+
+
+def _bwd_tile(q, k, v, do, lse, delta, q_pos, k_pos, *,
+              seq_q, seq_k, causal, window, softcap):
+    """Shared per-tile math: (p, ds) from one (block_q, block_k) tile.
+
+    q is pre-scaled; all operands f32. Invalid (masked / padded) pairs
+    yield p = ds = 0 exactly.
+    """
+    s = q @ k.T  # (block_q, block_k), pre-softcap
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    mask &= (q_pos < seq_q)[:, None] & (k_pos < seq_k)[None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])  # rebuilt from the residual, <= 1
+    dp = do @ v.T  # (block_q, block_k)
+    ds = p * (dp - delta[:, None])
+    if softcap is not None:
+        # d/dx softcap*tanh(x/softcap) = 1 - tanh^2 = 1 - (s/softcap)^2
+        ds = ds * jnp.where(mask, 1.0 - jnp.square(s / softcap), 0.0)
+    return p, ds
+
+
+def _attn_bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dq_ref, *,
+    block_q: int, block_k: int, seq_q: int, seq_k: int, causal: bool,
+    window: int | None, softcap: float | None, scale: float,
+):
+    """dq for one (batch, q-head, q-block): stream KV tiles, accumulate.
+
+    q/do/dq refs: (1, 1, block_q, D); k/v refs: (1, 1, seq_k_pad, D);
+    lse/dl refs: (1, 1, block_q).
+    """
+    q_blk = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0].astype(jnp.float32)
+    delta = dl_ref[0, 0].astype(jnp.float32)
+    D = q.shape[-1]
+    q_pos = q_blk * block_q + jax.lax.iota(jnp.int32, block_q)
+    num_k_blocks = pl.cdiv(seq_k, block_k)
+
+    def body(i, acc):
+        k_tile = k_ref[0, 0, pl.ds(i * block_k, block_k), :].astype(
+            jnp.float32
+        )
+        v_tile = v_ref[0, 0, pl.ds(i * block_k, block_k), :].astype(
+            jnp.float32
+        )
+        k_pos = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        _, ds = _bwd_tile(
+            q, k_tile, v_tile, do, lse, delta, q_pos, k_pos,
+            seq_q=seq_q, seq_k=seq_k, causal=causal, window=window,
+            softcap=softcap,
+        )
+        return acc + ds @ k_tile
+
+    if causal:
+        hi = jnp.minimum(num_k_blocks, (q_blk + 1) * block_q // block_k + 1)
+    else:
+        hi = num_k_blocks
+    lo = 0
+    if window is not None:
+        lo = jnp.maximum(0, (q_blk * block_q - window) // block_k)
+    acc = jax.lax.fori_loop(lo, hi, body, jnp.zeros((block_q, D), jnp.float32))
+    dq_ref[0, 0] = (scale * acc).astype(dq_ref.dtype)
+
+
+def _attn_bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dk_ref, dv_ref, *,
+    block_q: int, block_k: int, seq_q: int, seq_k: int, causal: bool,
+    window: int | None, softcap: float | None, scale: float,
+):
+    """dk/dv (per q head) for one (batch, q-head, kv-block): stream Q tiles.
+
+    k/v/dk/dv refs: (1, 1, block_k, D); q/do refs: (1, 1, seq_q_pad, D);
+    lse/dl refs: (1, 1, seq_q_pad). GQA group-sum happens in the wrapper.
+    """
+    k_blk = pl.program_id(2)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    D = k.shape[-1]
+    k_pos = k_blk * block_k + jax.lax.iota(jnp.int32, block_k)
+    num_q_blocks = pl.cdiv(seq_q, block_q)
+
+    def body(i, carry):
+        dk_acc, dv_acc = carry
+        q_tile = q_ref[0, 0, pl.ds(i * block_q, block_q), :].astype(
+            jnp.float32
+        ) * scale
+        do_tile = do_ref[0, 0, pl.ds(i * block_q, block_q), :].astype(
+            jnp.float32
+        )
+        lse = lse_ref[0, 0, pl.ds(i * block_q, block_q)].astype(jnp.float32)
+        delta = dl_ref[0, 0, pl.ds(i * block_q, block_q)].astype(jnp.float32)
+        q_pos = i * block_q + jax.lax.iota(jnp.int32, block_q)
+        p, ds = _bwd_tile(
+            q_tile, k, v, do_tile, lse, delta, q_pos, k_pos,
+            seq_q=seq_q, seq_k=seq_k, causal=causal, window=window,
+            softcap=softcap,
+        )
+        return dk_acc + ds.T @ q_tile, dv_acc + p.T @ do_tile
+
+    # only q blocks intersecting the causal/window band see this kv tile
+    lo = k_blk * block_k // block_q if causal else 0
+    hi = num_q_blocks
+    if window is not None:
+        hi = jnp.minimum(
+            num_q_blocks, ((k_blk + 1) * block_k - 1 + window) // block_q + 1
+        )
+    zeros = jnp.zeros((block_k, D), jnp.float32)
+    dk_acc, dv_acc = jax.lax.fori_loop(lo, hi, body, (zeros, zeros))
+    # q_tile is pre-scaled, so ds^T @ q_tile already carries the 1/sqrt(D)
+    dk_ref[0, 0] = dk_acc.astype(dk_ref.dtype)
+    dv_ref[0, 0] = dv_acc.astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,
+    o: jax.Array,  # (B, Hq, S, D)   saved forward output
+    lse: jax.Array,  # (B, Hq, S) f32  saved log-sum-exp
+    do: jax.Array,  # (B, Hq, S, D)   output cotangent
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Blocked backward launch: (dq, dk, dv) from the saved residuals.
+
+    Two tiled ``pl.pallas_call`` grids (dq over q blocks, dk/dv over kv
+    blocks) with the same causal/window/softcap statics as the forward;
+    per-q-head dk/dv partials are summed over each GQA group here.
+    """
+    B, Hq, S, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, Sk)
+
+    # delta = rowsum(do * o): the softmax-gradient row term, O(S) memory
+    delta = jnp.sum(
+        do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1
+    )  # (B, Hq, S)
+
+    qp, dop = _pad_seq(q, block_q), _pad_seq(do, block_q)
+    kp, vp = _pad_seq(k, block_k), _pad_seq(v, block_k)
+    pad_q = qp.shape[2] - S
+    lsep = jnp.pad(lse, ((0, 0), (0, 0), (0, pad_q)))
+    deltap = jnp.pad(delta, ((0, 0), (0, 0), (0, pad_q)))
+    Sp, Skp = qp.shape[2], kp.shape[2]
+
+    statics = dict(
+        block_q=block_q, block_k=block_k, seq_q=S, seq_k=Sk, causal=causal,
+        window=window, softcap=softcap, scale=scale,
+    )
+    dq = pl.pallas_call(
+        functools.partial(_attn_bwd_dq_kernel, **statics),
+        grid=(B, Hq, Sp // block_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Skp, D), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, Skp, D), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i: (b, h, i)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i: (b, h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sp, D), jnp.float32),
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, deltap)
+
+    dkq, dvq = pl.pallas_call(
+        functools.partial(_attn_bwd_dkv_kernel, **statics),
+        grid=(B, Hq, Skp // block_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, Sp, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, Sp, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Sp), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, 1, Sp), lambda b, h, j: (b, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, Skp, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, Skp, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, deltap)
+
+    # GQA: sum the per-q-head partials into their kv head
+    dk = dkq.reshape(B, Hkv, group, Skp, D).sum(2)[:, :, :Sk]
+    dv = dvq.reshape(B, Hkv, group, Skp, D).sum(2)[:, :, :Sk]
+    return (
+        dq[:, :, :S].astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
 # custom VJP: forward = the Pallas kernel (saving lse), backward = the
-# standard flash-attention gradient reconstructed from saved residuals.
-# The score/mask semantics come from kernels/ref.py attention_scores — the
-# single definition shared with the oracle, so forward and gradient cannot
-# drift apart.
+# blocked Pallas gradient above. The ref oracle's autodiff
+# (jax.grad of kernels/ref.py attention_ref) is the gradient ground truth
+# the parity harness compares against.
 # ---------------------------------------------------------------------------
 
 
@@ -188,6 +422,7 @@ def flash_attention(
 
 
 def _fa_fwd(q, k, v, causal, window, softcap, block_q, block_k, interpret):
+    """custom_vjp forward: run the kernel, save (q, k, v, o, lse)."""
     o, lse = flash_attention_fwd(
         q, k, v, causal=causal, window=window, softcap=softcap,
         block_q=block_q, block_k=block_k, interpret=interpret,
@@ -197,36 +432,11 @@ def _fa_fwd(q, k, v, causal, window, softcap, block_q, block_k, interpret):
 
 
 def _fa_bwd(causal, window, softcap, block_q, block_k, interpret, res, do):
-    from repro.kernels.ref import attention_scores
-
+    """custom_vjp backward: dispatch the blocked Pallas gradient kernels."""
     q, k, v, o, lse = res
-    B, Hq, S, D = q.shape
-    Hkv = k.shape[1]
-    g = Hq // Hkv
-    scale = 1.0 / math.sqrt(D)
-
-    s, mask = attention_scores(q, k, causal=causal, window=window,
-                               softcap=softcap)
-    grp = lambda x: x.reshape(B, Hkv, g, *x.shape[2:]).astype(jnp.float32)
-    do_g, o_g, lse_g = grp(do), grp(o), grp(lse)
-
-    # p = softmax reconstructed exactly from the saved log-sum-exp
-    p = jnp.where(
-        mask[None, None, None], jnp.exp(s - lse_g[..., None]), 0.0
-    )
-    dv = jnp.einsum("bkgst,bkgsd->bktd", p, do_g)
-    dp = jnp.einsum("bkgsd,bktd->bkgst", do_g, v.astype(jnp.float32))
-    delta = jnp.sum(do_g * o_g, axis=-1)  # rowsum(do * o)
-    ds = p * (dp - delta[..., None])
-    if softcap is not None:
-        ds = ds * (1.0 - jnp.square(s / softcap))  # d softcap*tanh(x/softcap)
-    dq = scale * jnp.einsum("bkgst,bktd->bkgsd", ds, k.astype(jnp.float32))
-    dk = scale * jnp.einsum("bkgst,bkgsd->bktd", ds,
-                            q.reshape(B, Hkv, g, S, D).astype(jnp.float32))
-    return (
-        dq.reshape(B, Hq, S, D).astype(q.dtype),
-        dk.astype(k.dtype),
-        dv.astype(v.dtype),
+    return flash_attention_bwd(
+        q, k, v, o, lse, do, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
     )
 
 

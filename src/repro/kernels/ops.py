@@ -26,6 +26,14 @@ needs BIT EXACTNESS, so ``_resolve_compute_dtype`` (the registry adapters'
 single policy point) picks psi.dtype under interpret mode, and the registry
 declares an exact (0, 0) f64 sparse-AXPY tolerance that the parity harness
 enforces.
+
+gradient policy: the differentiable kernels (flash_attention, ssd_chunk —
+``jax.custom_vjp`` with blocked Pallas backward kernels) additionally
+declare ``grad_argnums`` (which positional args carry cotangents) and a
+``grad_tol`` tolerance map. ``parity_check(..., grads=True)`` pulls vjp
+outputs through the requested backend and through 'off' — where the
+pure-jnp oracle's ordinary autodiff is the gradient ground truth — and
+asserts agreement within the declared grad tolerance.
 """
 from __future__ import annotations
 
@@ -40,8 +48,8 @@ import numpy as np
 
 from repro.kernels import flash_attention as FA
 from repro.kernels import ref as R
+from repro.kernels import ssd_scan as SSD
 from repro.kernels.sparse_saga import sparse_axpy, sparse_dot
-from repro.kernels.ssd_scan import ssd_chunk_fwd
 from repro.kernels.topk_compress import block_topk
 
 MODES = ("auto", "on", "interpret", "off")
@@ -65,6 +73,8 @@ def resolve_mode(use_pallas: str) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class Tolerance:
+    """An (rtol, atol) parity bound; (0, 0) means bit-exact."""
+
     rtol: float
     atol: float
 
@@ -72,6 +82,9 @@ class Tolerance:
 # default policies; kernels override per dtype at registration
 _F32_TOL = Tolerance(2e-5, 2e-5)
 _BF16_TOL = Tolerance(2e-2, 2e-2)
+# gradient defaults: one recompute deeper than the forward, so ~10x looser
+_F32_GRAD_TOL = Tolerance(2e-4, 2e-4)
+_BF16_GRAD_TOL = Tolerance(5e-2, 5e-2)
 
 
 def _strip_unknown_kwargs(fn: Callable) -> Callable:
@@ -108,6 +121,10 @@ class KernelSpec:
     compare: optional (args, got, want, tol) -> max_err comparator for
         kernels whose outputs match as sets rather than elementwise
         (block_topk); receives the input args for consistency checks.
+    grad_argnums: positional args that carry cotangents (None = the kernel
+        has no differentiable surface; parity_check(grads=True) rejects it).
+    grad_tol: {dtype name: Tolerance} policy for vjp outputs; None falls
+        back to the forward `tol` map.
     """
 
     name: str
@@ -115,8 +132,11 @@ class KernelSpec:
     ref: Callable
     tol: dict[str, Tolerance]
     compare: Callable | None = None
+    grad_argnums: tuple[int, ...] | None = None
+    grad_tol: dict[str, Tolerance] | None = None
 
     def impl(self, backend: str) -> Callable:
+        """Resolve a backend name to its callable (see class docstring)."""
         if backend == "ref":
             return _strip_unknown_kwargs(self.ref)
         if backend == "pallas":
@@ -126,16 +146,27 @@ class KernelSpec:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
 
     def tolerance(self, dtype) -> Tolerance:
+        """Forward-output parity Tolerance for `dtype` (f32 fallback)."""
         key = jnp.dtype(dtype).name
         if key in self.tol:
             return self.tol[key]
         return self.tol.get("float32", _F32_TOL)
+
+    def grad_tolerance(self, dtype) -> Tolerance:
+        """Vjp-output parity Tolerance for `dtype` (falls back to `tol`)."""
+        if self.grad_tol is None:
+            return self.tolerance(dtype)
+        key = jnp.dtype(dtype).name
+        if key in self.grad_tol:
+            return self.grad_tol[key]
+        return self.grad_tol.get("float32", _F32_GRAD_TOL)
 
 
 _REGISTRY: dict[str, KernelSpec] = {}
 
 
 def register_kernel(spec: KernelSpec) -> KernelSpec:
+    """Add `spec` to the registry; duplicate names are a hard error."""
     if spec.name in _REGISTRY:
         raise ValueError(f"kernel {spec.name!r} already registered")
     _REGISTRY[spec.name] = spec
@@ -143,10 +174,12 @@ def register_kernel(spec: KernelSpec) -> KernelSpec:
 
 
 def get_kernel(name: str) -> KernelSpec:
+    """Look up a registered KernelSpec by name (KeyError if unknown)."""
     return _REGISTRY[name]
 
 
 def registered_kernels() -> tuple[str, ...]:
+    """Sorted names of every registered kernel."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -165,27 +198,8 @@ def _leaf_max_err(got, want) -> float:
     return float(np.max(np.abs(ga - wa))) if ga.size else 0.0
 
 
-def parity_check(
-    name: str, *args, use_pallas: str = "interpret", tol_dtype=None, **kwargs
-) -> float:
-    """Assert kernel-vs-oracle agreement within the declared tolerance.
-
-    Runs `name` under `use_pallas` and under 'off', compares every output
-    leaf with the kernel's Tolerance for `tol_dtype` (default: dtype of the
-    first array argument), and returns the max abs error across leaves.
-    A Tolerance of (0, 0) asserts bit-exactness.
-    """
-    spec = get_kernel(name)
-    if tol_dtype is None:
-        tol_dtype = next(
-            a.dtype for a in args if hasattr(a, "dtype")
-            and jnp.issubdtype(a.dtype, jnp.floating)
-        )
-    tol = spec.tolerance(tol_dtype)
-    got = dispatch(name, *args, use_pallas=use_pallas, **kwargs)
-    want = dispatch(name, *args, use_pallas="off", **kwargs)
-    if spec.compare is not None:
-        return spec.compare(args, got, want, tol)
+def _assert_leaves_close(name, got, want, tol: Tolerance) -> float:
+    """Elementwise leaf comparison shared by the fwd and vjp parity paths."""
     got_leaves = jax.tree_util.tree_leaves(got)
     want_leaves = jax.tree_util.tree_leaves(want)
     assert len(got_leaves) == len(want_leaves), (name, got, want)
@@ -199,6 +213,81 @@ def parity_check(
                 rtol=tol.rtol, atol=tol.atol,
             )
         max_err = max(max_err, _leaf_max_err(g, w))
+    return max_err
+
+
+def _cotangents_like(out):
+    """Deterministic non-constant cotangents for vjp parity (no PRNG key:
+    a sin ramp avoids the symmetric cancellations an all-ones seed hides)."""
+
+    def one(leaf):
+        ramp = jnp.sin(jnp.arange(leaf.size, dtype=jnp.float32) * 0.7)
+        return ramp.reshape(leaf.shape).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(one, out)
+
+
+def _vjp_outputs(spec: KernelSpec, backend: str, args, kwargs):
+    """Pull deterministic cotangents back through `backend`'s kernel.
+
+    Differentiates w.r.t. spec.grad_argnums only (sparse kernels carry int
+    index args); non-diff args and kwargs are closed over. Returns the
+    cotangent tuple, one entry per grad argnum.
+    """
+    if spec.grad_argnums is None:
+        raise ValueError(f"kernel {spec.name!r} declares no grad_argnums")
+    impl = spec.impl(backend)
+    diff_args = tuple(args[i] for i in spec.grad_argnums)
+
+    def fn(*diff):
+        full = list(args)
+        for i, a in zip(spec.grad_argnums, diff):
+            full[i] = a
+        return impl(*full, **kwargs)
+
+    out, pullback = jax.vjp(fn, *diff_args)
+    return pullback(_cotangents_like(out))
+
+
+def parity_check(
+    name: str, *args, use_pallas: str = "interpret", tol_dtype=None,
+    grads: bool = False, **kwargs
+) -> float:
+    """Assert kernel-vs-oracle agreement within the declared tolerance.
+
+    Runs `name` under `use_pallas` and under 'off', compares every output
+    leaf with the kernel's Tolerance for `tol_dtype` (default: dtype of the
+    first array argument), and returns the max abs error across leaves.
+    A Tolerance of (0, 0) asserts bit-exactness.
+
+    grads=True additionally compares vjp outputs (deterministic cotangents
+    pulled back through the kernel's grad_argnums) under the kernel's
+    grad tolerance — for the 'off' leg this is plain jax autodiff of the
+    pure-jnp oracle, i.e. the registry-resolved custom_vjp backward is
+    checked against reference autodiff. The returned max error covers both
+    the forward and vjp leaves.
+    """
+    spec = get_kernel(name)
+    if tol_dtype is None:
+        tol_dtype = next(
+            a.dtype for a in args if hasattr(a, "dtype")
+            and jnp.issubdtype(a.dtype, jnp.floating)
+        )
+    tol = spec.tolerance(tol_dtype)
+    got = dispatch(name, *args, use_pallas=use_pallas, **kwargs)
+    want = dispatch(name, *args, use_pallas="off", **kwargs)
+    if spec.compare is not None:
+        max_err = spec.compare(args, got, want, tol)
+    else:
+        max_err = _assert_leaves_close(name, got, want, tol)
+    if grads:
+        backend = resolve_mode(use_pallas)
+        got_ct = _vjp_outputs(spec, backend, args, kwargs)
+        want_ct = _vjp_outputs(spec, "ref", args, kwargs)
+        grad_err = _assert_leaves_close(
+            f"{name}:vjp", got_ct, want_ct, spec.grad_tolerance(tol_dtype)
+        )
+        max_err = max(max_err, grad_err)
     return max_err
 
 
@@ -228,8 +317,9 @@ def _topk_compare(args, got, want, tol: Tolerance) -> float:
 
 def _flash_pallas(q, k, v, *, causal=True, window=None, softcap=None,
                   interpret=False):
-    # the custom_vjp wrapper: differentiable without re-running a reference
-    # forward (statics are positional for jax.custom_vjp)
+    """Registry adapter: the flash-attention custom_vjp wrapper (forward
+    kernel + blocked Pallas backward; statics are positional for
+    jax.custom_vjp)."""
     return FA.flash_attention(
         q, k, v, causal, window, softcap, 128, 128, interpret
     )
@@ -240,13 +330,33 @@ register_kernel(KernelSpec(
     pallas=_flash_pallas,
     ref=R.attention_ref,
     tol={"float32": _F32_TOL, "bfloat16": _BF16_TOL},
+    grad_argnums=(0, 1, 2),
+    # vjp vs ref autodiff: blocked-recompute bwd measured <5e-6 f32 /
+    # <4e-2 bf16 worst-case over the statics grid (tests/test_kernel_grads)
+    grad_tol={"float32": _F32_GRAD_TOL, "bfloat16": _BF16_GRAD_TOL},
 ))
+
+
+def _ssd_pallas(xdt, cum, Bc, Cc, *, head_block=None, interpret=False):
+    """Registry adapter: the ssd_chunk custom_vjp wrapper (within-chunk
+    forward kernel + chunked backward kernel over the saved residuals).
+    head_block=None picks the largest grid-legal block (<= 4 heads) that
+    divides the model's head count."""
+    if head_block is None:
+        nh = xdt.shape[3]
+        head_block = next(hb for hb in (4, 3, 2, 1) if nh % hb == 0)
+    return SSD.ssd_chunk(xdt, cum, Bc, Cc, head_block, interpret)
+
 
 register_kernel(KernelSpec(
     name="ssd_chunk",
-    pallas=ssd_chunk_fwd,
+    pallas=_ssd_pallas,
     ref=R.ssd_chunk_ref,
     tol={"float32": _F32_TOL, "bfloat16": _BF16_TOL},
+    grad_argnums=(0, 1, 2, 3),
+    # vjp vs ref autodiff measured <6e-5 f32 worst-case; models/ssm.py
+    # always feeds f32, so no bf16 grad policy is declared
+    grad_tol={"float32": _F32_GRAD_TOL},
 ))
 
 
@@ -312,17 +422,24 @@ register_kernel(KernelSpec(
 @partial(jax.jit, static_argnames=("causal", "window", "softcap", "use_pallas"))
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                     use_pallas: str = "auto"):
+    """Registry-dispatched attention, differentiable under every mode
+    (custom_vjp blocked backward on the kernel backends, plain autodiff of
+    the oracle under 'off'/CPU-'auto')."""
     return dispatch("flash_attention", q, k, v, causal=causal, window=window,
                     softcap=softcap, use_pallas=use_pallas)
 
 
 @partial(jax.jit, static_argnames=("use_pallas",))
 def ssd_chunk(xdt, cum, Bc, Cc, *, use_pallas: str = "auto"):
+    """Registry-dispatched within-chunk SSD -> (y_intra, chunk states);
+    differentiable under every mode (chunked custom_vjp backward on the
+    kernel backends)."""
     return dispatch("ssd_chunk", xdt, cum, Bc, Cc, use_pallas=use_pallas)
 
 
 @partial(jax.jit, static_argnames=("use_pallas",))
 def saga_sparse_dot(psi, idx, val, *, use_pallas: str = "auto"):
+    """Registry-dispatched per-node sparse dot (DSBA step, eq. 30 input)."""
     return dispatch("sparse_dot", psi, idx, val, use_pallas=use_pallas)
 
 
@@ -331,6 +448,8 @@ def saga_sparse_dot(psi, idx, val, *, use_pallas: str = "auto"):
 )
 def saga_sparse_axpy(psi, idx, val, coef, rho, *, use_pallas: str = "auto",
                      compute_dtype=None, node_block: int = 1):
+    """Registry-dispatched sparse AXPY row update (the DSBA-s relay's
+    densification hot path)."""
     # compute_dtype=None -> the registry adapter's central policy
     # (_resolve_compute_dtype); the ref backend strips kernel-only kwargs
     return dispatch(
@@ -341,4 +460,5 @@ def saga_sparse_axpy(psi, idx, val, coef, rho, *, use_pallas: str = "auto",
 
 @partial(jax.jit, static_argnames=("k", "use_pallas"))
 def topk_blocks(x, k: int, *, use_pallas: str = "auto"):
+    """Registry-dispatched block-local top-|value| selection (gossip)."""
     return dispatch("block_topk", x, k, use_pallas=use_pallas)

@@ -1,4 +1,10 @@
-"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+These are also the GRADIENT oracles: each oracle is plain differentiable
+jnp, so ``jax.grad`` through it is the reference the registry's
+``parity_check(..., grads=True)`` compares the custom_vjp blocked backward
+kernels against (kernels/ops.py grad-tolerance policies).
+"""
 from __future__ import annotations
 
 import math
@@ -48,6 +54,7 @@ def attention_ref(
     window: int | None = None,
     softcap: float | None = None,
 ) -> jax.Array:
+    """Dense softmax-attention oracle: (B, Hq, S, D) output in q.dtype."""
     B, Hq, S, D = q.shape
     s, mask = attention_scores(q, k, causal=causal, window=window,
                                softcap=softcap)
@@ -71,6 +78,7 @@ def ssd_chunk_ref(xdt, cum, Bc, Cc):
 
 
 def sparse_dot_ref(psi, idx, val):
+    """Per-node sparse dot oracle: out[n] = sum_k val[n,k] * psi[n, idx[n,k]]."""
     # f32 floor matches the TPU kernel's MXU accumulation; f64 inputs stay
     # f64 so the interpret-mode parity policy (1e-12) is meetable
     ct = jnp.promote_types(psi.dtype, jnp.float32)
@@ -80,6 +88,8 @@ def sparse_dot_ref(psi, idx, val):
 
 
 def sparse_axpy_ref(psi, idx, val, coef, rho):
+    """Sparse AXPY oracle: out[n] = rho[n] * psi[n] + coef[n] * scatter(val)."""
+
     def one(p, i, v, c, r):
         return (r * p).at[i].add(c * v)
 
@@ -88,6 +98,8 @@ def sparse_axpy_ref(psi, idx, val, coef, rho):
 
 
 def block_topk_ref(x, k):
+    """Per-block top-k-by-|value| oracle via lax.top_k: (vals, int32 idx)."""
+
     def one(row):
         _, i = jax.lax.top_k(jnp.abs(row), k)
         return row[i], i.astype(jnp.int32)

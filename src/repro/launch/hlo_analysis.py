@@ -15,8 +15,13 @@ instruction costs weighted by execution multiplicity:
 Validated against cost_analysis() on loop-free programs and against manual
 math on scanned programs (tests/test_hlo_analysis.py).
 
-Hardware model (TPU v5e target): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
-~50 GB/s/link ICI.
+Contract: `program_costs(hlo_text)` is pure text analysis — it never
+executes the program, tolerates unknown ops (counted as zero-cost), and
+weights every instruction by the product of the trip counts of the while
+loops enclosing it. `xla_cost_analysis(compiled)` is the only function
+that touches a live executable, and only to normalize the dict/list API
+drift. Hardware model (TPU v5e target): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
 """
 from __future__ import annotations
 

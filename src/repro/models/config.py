@@ -90,7 +90,14 @@ class ModelConfig:
     # use_pallas mode ('auto'|'on'|'interpret'|'off') handed to
     # ops.flash_attention (custom_vjp Pallas kernel on TPU, jnp oracle on
     # CPU under 'auto'). Decode/cross/traced-window paths stay on 'jnp'.
+    # The kernel is a custom_vjp, so training gradients route through the
+    # blocked Pallas backward under the same mode.
     attention_kernel: str = "jnp"
+    # route the SSD within-chunk compute (train/prefill) through the
+    # registry's ssd_chunk custom_vjp kernel: 'jnp' = the inline einsum
+    # path in models/ssm.py (default), otherwise a use_pallas mode. The
+    # O(1) recurrent decode step stays on 'jnp' (no chunk structure).
+    ssm_kernel: str = "jnp"
     # shard attention compute by Q heads (n_heads) instead of KV heads:
     # GQA models with kv_heads < mesh 'model' size otherwise replicate the
     # whole attention computation across the model axis. Expands K/V per

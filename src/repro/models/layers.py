@@ -6,7 +6,12 @@ Activation sharding hints go through `shard_act` (no-op without a mesh).
 
 The jnp attention here is the reference path; kernels/flash_attention.py is
 the TPU Pallas version (validated against this in interpret mode). Dispatch
-is by config — the CPU dry-run and numerics tests use this path.
+is by config (`ModelConfig.attention_kernel`) — the CPU dry-run and
+numerics tests use this path. The registry-dispatched kernel is a
+custom_vjp, so when a config routes attention through it the TRAINING
+BACKWARD also runs the blocked Pallas gradient kernels (dq + dk/dv tiles
+recomputed from the saved log-sum-exp) — no S x S probability matrix in
+either direction.
 """
 from __future__ import annotations
 

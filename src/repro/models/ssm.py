@@ -8,8 +8,11 @@ Decode is the O(1) recurrent update on a (B, nh, dstate, headdim) state.
 ngroups = 1 (B and C shared across heads), scalar decay A per head — the
 standard Mamba2 configuration.
 
-kernels/ssd_scan.py implements the within-chunk compute as a Pallas kernel;
-this file is the pure-jnp reference used on CPU and by kernel tests.
+kernels/ssd_scan.py implements the within-chunk compute as a Pallas kernel
+(a custom_vjp, so the training backward is the chunked Pallas gradient);
+``ModelConfig.ssm_kernel`` routes the train/prefill path through it via the
+kernels/ops.py registry, while this file's inline einsums are the pure-jnp
+reference used on CPU and by kernel tests.
 """
 from __future__ import annotations
 
@@ -57,7 +60,8 @@ def _depthwise_conv_valid(x: jax.Array, w: jax.Array) -> jax.Array:
     return jax.nn.silu(out)
 
 
-def _ssd_chunked(xh, dt, a_log, Bc, Cc, chunk, h0=None, head_block=0):
+def _ssd_chunked(xh, dt, a_log, Bc, Cc, chunk, h0=None, head_block=0,
+                 kernel="jnp"):
     """Chunked SSD scan.
 
     xh: (B, S, nh, hd)  inputs per head
@@ -68,6 +72,10 @@ def _ssd_chunked(xh, dt, a_log, Bc, Cc, chunk, h0=None, head_block=0):
     head_block: >0 streams the within-chunk compute over head blocks so the
       (i, j) decay tile is (B, nc, Q, Q, head_block) instead of
       (B, nc, Q, Q, nh) — an nh/head_block-fold cut of the dominant buffer.
+    kernel: 'jnp' keeps the inline einsum within-chunk path; any use_pallas
+      mode dispatches it through ops.ssd_chunk (custom_vjp — forward AND
+      backward are the blocked Pallas kernels under 'on'/'interpret'). The
+      across-chunk recurrence stays in jnp either way (negligible FLOPs).
     Returns y: (B, S, nh, hd), final_state: (B, nh, ds, hd)
     """
     if head_block and head_block < xh.shape[2]:
@@ -91,7 +99,7 @@ def _ssd_chunked(xh, dt, a_log, Bc, Cc, chunk, h0=None, head_block=0):
         def one(args):
             xh_i, dt_i, al_i, h0_i = args
             return _ssd_chunked(xh_i, dt_i, al_i, Bc, Cc, chunk,
-                                h0=h0_i, head_block=0)
+                                h0=h0_i, head_block=0, kernel=kernel)
 
         ys, hs = jax.lax.map(
             one,
@@ -126,16 +134,24 @@ def _ssd_chunked(xh, dt, a_log, Bc, Cc, chunk, h0=None, head_block=0):
     Cc_ = r(Cc.astype(f32), (Bsz, nc, Q, ds))
 
     cum = jnp.cumsum(al, axis=2)  # (B, nc, Q, nh) inclusive
-    # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xdt_j
-    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,nh)
-    tri = jnp.tril(jnp.ones((Q, Q), bool))
-    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
-    scores = jnp.einsum("bcis,bcjs->bcij", Cc_, Bc_)  # (B, nc, i, j)
-    y_intra = jnp.einsum("bcij,bcijh,bcjhd->bcihd", scores, decay, xdt)
+    if kernel != "jnp" and f32 == jnp.float32:
+        # registry-dispatched within-chunk kernel (custom_vjp: the training
+        # backward is the chunked Pallas gradient). f64 callers fall through
+        # to the inline path — the kernel accumulates in f32 only.
+        from repro.kernels import ops as KO
 
-    # chunk states: state_c = sum_j exp(cum_last - cum_j) B_j (x) xdt_j
-    dte = jnp.exp(cum[:, :, -1:, :] - cum)  # (B, nc, Q, nh)
-    states = jnp.einsum("bcjs,bcjh,bcjhd->bchsd", Bc_, dte, xdt)  # (B,nc,nh,ds,hd)
+        y_intra, states = KO.ssd_chunk(xdt, cum, Bc_, Cc_, use_pallas=kernel)
+    else:
+        # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xdt_j
+        decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,nh)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+        scores = jnp.einsum("bcis,bcjs->bcij", Cc_, Bc_)  # (B, nc, i, j)
+        y_intra = jnp.einsum("bcij,bcijh,bcjhd->bcihd", scores, decay, xdt)
+
+        # chunk states: state_c = sum_j exp(cum_last - cum_j) B_j (x) xdt_j
+        dte = jnp.exp(cum[:, :, -1:, :] - cum)  # (B, nc, Q, nh)
+        states = jnp.einsum("bcjs,bcjh,bcjhd->bchsd", Bc_, dte, xdt)  # (B,nc,nh,ds,hd)
 
     # inter-chunk recurrence
     total = jnp.exp(cum[:, :, -1, :])  # (B, nc, nh)
@@ -207,7 +223,8 @@ def ssm_block(
 
     if cache is None:
         y, _ = _ssd_chunked(xh, dt, a_log, Bc, Cc, cfg.ssm_chunk,
-                            head_block=cfg.ssm_head_block)
+                            head_block=cfg.ssm_head_block,
+                            kernel=cfg.ssm_kernel)
     elif S == 1:
         # recurrent step: h = exp(dt A) h + B (x) (dt x);  y = C.h
         h = cache["state"].astype(jnp.float32)  # (B, nh, ds, hd)
@@ -221,7 +238,7 @@ def ssm_block(
         # prefill with cache: chunked scan from the cached state
         y, h_final = _ssd_chunked(
             xh, dt, a_log, Bc, Cc, cfg.ssm_chunk, h0=cache["state"],
-            head_block=cfg.ssm_head_block,
+            head_block=cfg.ssm_head_block, kernel=cfg.ssm_kernel,
         )
         new_cache = {"state": h_final.astype(jnp.float32), "conv": new_conv}
 

@@ -18,6 +18,14 @@ Public API:
   cache_defs(cfg, batch, max_len)      -> decode-cache ShapeDtypeStructs
   prefill(cfg, params, batch, cache)   -> (cache, last_logits)
   decode_step(cfg, params, tok, cache) -> (cache, logits)
+
+Kernel routing: `cfg.attention_kernel` / `cfg.ssm_kernel` swap the full-seq
+attention and SSD within-chunk compute for the kernels/ops.py registry's
+custom_vjp Pallas kernels — forward AND backward — so `jax.grad` through
+`forward` (train/step.py local_grads) takes the blocked gradient kernels.
+The remat policy composes with this unchanged: the custom_vjp boundary is
+what gets rematerialized, and its residual contract (O(S), never O(S^2))
+is exactly what the scan carries between layers.
 """
 from __future__ import annotations
 

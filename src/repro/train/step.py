@@ -4,6 +4,14 @@ The single-pod step is a plain pjit program: FSDP (params/opt-state over
 'data') x TP (heads/mlp/experts/vocab over 'model'), batch over 'data'.
 The multi-pod decentralized step lives in core/gossip.py and reuses
 `local_grads` / `apply_updates` from here.
+
+The backward pass of `local_grads` is where the kernel registry's
+custom_vjp backends pay off: with `ModelConfig.attention_kernel` /
+`ssm_kernel` set to a use_pallas mode, jax.grad routes attention and SSD
+gradients through the blocked Pallas backward kernels (kernels/ops.py) —
+the model's most memory-hungry cotangents never materialize an S x S
+intermediate. Nothing in this module changes per mode; routing is entirely
+config-driven.
 """
 from __future__ import annotations
 

@@ -1,4 +1,5 @@
 """Mamba2/SSD correctness: chunked scan == naive sequential recurrence."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -73,3 +74,38 @@ def test_split_prefill_equals_full():
                                np.asarray(y_full), rtol=1e-8, atol=1e-8)
     np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
                                rtol=1e-8, atol=1e-8)
+
+
+def test_kernel_routing_matches_jnp_fwd_and_grad():
+    """cfg.ssm_kernel routing: the registry's ssd_chunk custom_vjp path ==
+    the inline einsum path, forward AND backward, through the full chunked
+    scan (ragged S -> zero-pad path, h0, nh=3 odd head_block)."""
+    rng = np.random.default_rng(3)
+    B, S, nh, hd, ds = 2, 20, 3, 4, 5  # 20 % chunk(8) != 0 -> pad branch
+    f32 = jnp.float32
+    xh = jnp.asarray(rng.standard_normal((B, S, nh, hd)), f32)
+    dt = jnp.asarray(rng.uniform(0.1, 1.0, (B, S, nh)), f32)
+    a_log = jnp.asarray(-rng.uniform(0.01, 0.5, (B, S, nh)), f32)
+    Bc = jnp.asarray(rng.standard_normal((B, S, ds)), f32)
+    Cc = jnp.asarray(rng.standard_normal((B, S, ds)), f32)
+    h0 = jnp.asarray(rng.standard_normal((B, nh, ds, hd)), f32)
+
+    y0, hf0 = _ssd_chunked(xh, dt, a_log, Bc, Cc, 8, h0=h0)
+    y1, hf1 = _ssd_chunked(xh, dt, a_log, Bc, Cc, 8, h0=h0,
+                           kernel="interpret")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(hf1), np.asarray(hf0),
+                               rtol=2e-5, atol=2e-5)
+
+    def grads(kern):
+        return jax.grad(
+            lambda x, b: jnp.sum(jnp.sin(
+                _ssd_chunked(x, dt, a_log, b, Cc, 8, kernel=kern)[0]
+            )),
+            argnums=(0, 1),
+        )(xh, Bc)
+
+    for g_k, g_j in zip(grads("interpret"), grads("jnp")):
+        np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_j),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,64 @@
+"""Dead-relative-link check for the markdown docs.
+
+    python tools/check_links.py [files...]
+
+With no arguments, checks README.md, ROADMAP.md, and every .md under
+docs/. For each markdown link or image `[text](target)`:
+
+- http(s)/mailto targets are skipped (no network in CI),
+- pure-anchor targets (`#section`) are skipped,
+- targets that resolve OUTSIDE the repo root are skipped (GitHub
+  site-relative URLs like the CI badge's `../../actions/...`),
+- everything else must exist on disk relative to the file containing the
+  link (a `#fragment` suffix is stripped first).
+
+Exits non-zero listing every dead link. Run by the CI lint job and by
+tests/test_docs_links.py.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def default_files() -> list[pathlib.Path]:
+    files = [ROOT / "README.md", ROOT / "ROADMAP.md"]
+    files += sorted((ROOT / "docs").glob("**/*.md"))
+    return [f for f in files if f.exists()]
+
+
+def dead_links(md_file: pathlib.Path) -> list[str]:
+    dead = []
+    for target in LINK_RE.findall(md_file.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md_file.parent / path).resolve()
+        if not resolved.is_relative_to(ROOT):
+            continue  # site-relative (escapes the repo): not checkable
+        if not resolved.exists():
+            dead.append(f"{md_file.relative_to(ROOT)}: ({target}) -> "
+                        f"{resolved.relative_to(ROOT)} does not exist")
+    return dead
+
+
+def main(argv: list[str]) -> int:
+    files = [pathlib.Path(a).resolve() for a in argv] or default_files()
+    failures = [msg for f in files for msg in dead_links(f)]
+    for msg in failures:
+        print(f"DEAD LINK  {msg}")
+    if failures:
+        print(f"\n{len(failures)} dead link(s)")
+        return 1
+    print(f"checked {len(files)} file(s): all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
