@@ -1,8 +1,9 @@
 """Paper Table 1 (communication column) + Section 5.1 cost model validation.
 
-Runs the ACTUAL DSBA-s relay simulator and checks measured DOUBLEs per node
-per iteration against the closed-form O(N rho d) model and against the dense
-O(Delta(G) d) baselines; prints the crossover ratios the paper claims.
+Runs the ACTUAL DSBA-s relay via ``solve(..., comm="sparse")`` and checks
+the ``SolveResult.doubles_received`` accounting against the closed-form
+O(N rho d) model and against the dense O(Delta(G) d) baselines; prints the
+crossover ratios the paper claims.
 
 Also sweeps ring topologies at N in {8, 16, 32} — the regime where DSA's
 O(N) relay delays and Lan et al.'s communication-complexity analysis bite,
@@ -19,10 +20,10 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np
 
 from repro.core import mixing
-from repro.core.dsba import DSBAConfig, draw_indices
-from repro.core.operators import OperatorSpec
+from repro.core.dsba import draw_indices
+from repro.core.solvers import make_problem, solve
 from repro.core.sparse_comm import (
-    dense_doubles_per_iter, run_sparse, sparse_doubles_per_iter,
+    dense_doubles_per_iter, sparse_doubles_per_iter,
 )
 from repro.data.synthetic import DATASET_PRESETS, make_regression
 
@@ -30,10 +31,10 @@ from repro.data.synthetic import DATASET_PRESETS, make_regression
 def measure(n=8, q=10, d=800, k=12, steps=25, seed=0):
     data = make_regression(n, q, d, k=k, seed=seed)
     graph = mixing.erdos_renyi_graph(n, 0.4, seed=2)
-    w = mixing.laplacian_mixing(graph)
-    cfg = DSBAConfig(OperatorSpec("ridge"), alpha=0.3, lam=1e-3)
+    problem = make_problem("ridge", data, graph, lam=1e-3)
     idx = draw_indices(steps, n, q, seed=3)
-    res = run_sparse(cfg, data, graph, w, steps, idx, verify=True)
+    res = solve(problem, "dsba", comm="sparse", steps=steps, record_every=1,
+                indices=idx, alpha=0.3, comm_options={"verify": True})
     steady = np.diff(res.doubles_received, axis=0)[-8:]
     return data, graph, steady, res
 
@@ -50,19 +51,20 @@ def topology_sweep(sizes=(8, 16, 32), q=10, d=256, k=8, seed=0):
           f"{'model':>6} {'dense':>8} {'wall':>7} {'ms/iter':>8}")
     for n in sizes:
         graph = mixing.ring_graph(n)
-        w = mixing.laplacian_mixing(graph)
         data = make_regression(n, q, d, k=k, seed=seed)
-        cfg = DSBAConfig(OperatorSpec("ridge"), alpha=0.3, lam=1e-3)
+        problem = make_problem("ridge", data, graph, lam=1e-3)
         steps = 2 * graph.diameter + 40
         extra = 600
         idx = draw_indices(steps + extra, n, q, seed=3)
         t0 = time.perf_counter()
-        res = run_sparse(cfg, data, graph, w, steps, idx)
+        res = solve(problem, "dsba", comm="sparse", steps=steps,
+                    record_every=1, indices=idx, alpha=0.3)
         wall = time.perf_counter() - t0
         # wall above is compile-dominated (one jitted scan per call); the
         # marginal cost of `extra` more iterations isolates the engine speed
         t0 = time.perf_counter()
-        run_sparse(cfg, data, graph, w, steps + extra, idx)
+        solve(problem, "dsba", comm="sparse", steps=steps + extra,
+              record_every=steps + extra, indices=idx, alpha=0.3)
         ms_iter = 1e3 * (time.perf_counter() - t0 - wall) / extra
         steady = np.diff(res.doubles_received, axis=0)[graph.diameter + 2 :]
         measured = sorted(set(steady.reshape(-1).tolist()))
@@ -89,7 +91,8 @@ def main():
           int(dense.min()), "..", int(dense.max()))
     print(f"sparse/dense ratio: {model / dense.max():.4f} "
           f"(= O(N rho d) / O(Delta d))")
-    print(f"protocol reconstruction max error: {res.recon_max_err:.2e}")
+    print("protocol reconstruction max error: "
+          f"{res.extras['recon_max_err']:.2e}")
 
     print("\nprojected per-iteration DOUBLEs at paper-scale datasets "
           "(N=10, ER(0.4) E[deg]~3.6):")

@@ -1,8 +1,9 @@
 """Paper Figures 1-3: convergence vs effective passes + communication cost.
 
 One synthetic dataset per task family (stats matched to the paper's LIBSVM
-sets, d capped for the CPU reference solve), all five methods, paper
-hyper-struct: N=10, ER(0.4), lambda=1/(10Q), ||a||=1.
+sets, d capped for the CPU reference solve), all five methods through the
+one registry entrypoint ``core.solvers.solve``, paper hyper-struct: N=10,
+ER(0.4), lambda=1/(10Q), ||a||=1.
 
 Emits a markdown/CSV table per task into experiments/convergence_<task>.md.
 """
@@ -11,89 +12,86 @@ from __future__ import annotations
 import pathlib
 
 
-from repro.core import mixing, reference
-from repro.core.baselines import run_dlm, run_extra, run_ssda
-from repro.core.dsba import DSBAConfig, run
-from repro.core.operators import OperatorSpec
-from repro.core.sparse_comm import dense_doubles_per_iter, sparse_doubles_per_iter
+from repro.core import mixing
+from repro.core.solvers import make_problem, solve
+from repro.core.sparse_comm import sparse_doubles_per_iter
 from repro.data.synthetic import make_classification, make_regression
 
 OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
 
-# per-method tuned step sizes (grid-searched; the paper also tunes per-method).
-# The problem is deliberately run at the paper's lambda = 1/(10Q), i.e.
-# kappa ~ L/lambda ~ 10^3: DSBA's backward step stays stable at alpha = 4
-# while the forward/deterministic methods are condition-limited — exactly
-# Table 1's story.
+# per-method tuned hyperparameters (grid-searched; the paper also tunes
+# per-method). The problem is deliberately run at the paper's
+# lambda = 1/(10Q), i.e. kappa ~ L/lambda ~ 10^3: DSBA's backward step stays
+# stable at alpha = 4 while the forward/deterministic methods are
+# condition-limited — exactly Table 1's story.
 TUNING = {
-    "ridge": dict(dsba=4.0, dsa=0.5, extra=0.5, dlm=(0.2, 0.5),
-                  ssda=(1e-4, 0.0)),
-    "logistic": dict(dsba=8.0, dsa=1.0, extra=1.0, dlm=(0.1, 0.5),
-                     ssda=(1e-4, 0.0)),
-    "auc": dict(dsba=1.0, dsa=0.05),
+    "ridge": dict(dsba=dict(alpha=4.0), dsa=dict(alpha=0.5),
+                  extra=dict(alpha=0.5), dlm=dict(c=0.2, beta=0.5),
+                  ssda=dict(eta=1e-4, momentum=0.0)),
+    "logistic": dict(dsba=dict(alpha=8.0), dsa=dict(alpha=1.0),
+                     extra=dict(alpha=1.0), dlm=dict(c=0.1, beta=0.5),
+                     ssda=dict(eta=1e-4, momentum=0.0)),
+    "auc": dict(dsba=dict(alpha=1.0), dsa=dict(alpha=0.05),
+                extra=dict(alpha=0.5)),
 }
 
 
 def setup(task: str, n=10, q=100, d=800, k=30, seed=0):
+    """Paper-shaped ``Problem`` for one task family, z* cached."""
     if task == "ridge":
         data = make_regression(n, q, d, k=k, seed=seed)
-        spec = OperatorSpec("ridge")
     elif task == "logistic":
         data = make_classification(n, q, d, k=k, seed=seed)
-        spec = OperatorSpec("logistic")
     else:
         data = make_classification(n, q, d, k=k, positive_ratio=0.3, seed=seed)
-        spec = OperatorSpec("auc", p=data.positive_ratio())
     graph = mixing.erdos_renyi_graph(n, 0.4, seed=1)
-    w = mixing.laplacian_mixing(graph)
-    lam = 1.0 / (10.0 * data.total)
-    z_star = reference.solve_root(spec, data, lam)
-    return data, spec, graph, w, lam, z_star
+    problem = make_problem(task, data, graph)
+    problem.solve_star()
+    return problem
 
 
 def run_all(task: str, passes: int = 120):
-    data, spec, graph, w, lam, z_star = setup(task)
+    """dist2-vs-passes for every tuned method + the communication model."""
+    problem = setup(task)
+    data = problem.data
     q = data.q
     tune = TUNING[task]
     out = {}
 
-    res = run(DSBAConfig(spec, tune["dsba"], lam), data, w, passes * q,
-              z_star=z_star, record_every=q)
+    res = solve(problem, "dsba", steps=passes * q, record_every=q,
+                **tune["dsba"])
     out["DSBA"] = res.dist2
-    res = run(DSBAConfig(spec, tune["dsa"], lam, method="dsa"), data, w,
-              passes * q, z_star=z_star, record_every=q)
+    res = solve(problem, "dsa", steps=passes * q, record_every=q,
+                **tune["dsa"])
     out["DSA"] = res.dist2
 
+    det = solve(problem, "extra", steps=passes, record_every=1,
+                **tune["extra"])
+    out["EXTRA"] = det.dist2
     if task != "auc":  # paper: SSDA n/a for AUC; DLM does not converge there
-        res = run_extra(spec, data, w, tune["extra"], lam, passes,
-                        z_star=z_star, record_every=1)
-        out["EXTRA"] = res.dist2
-        c, beta = tune["dlm"]
-        res = run_dlm(spec, data, graph, c, beta, lam, passes,
-                      z_star=z_star, record_every=1)
+        res = solve(problem, "dlm", steps=passes, record_every=1,
+                    **tune["dlm"])
         out["DLM"] = res.dist2
-        eta, mom = tune["ssda"]
-        res = run_ssda(spec, data, w, eta, mom, lam, passes,
-                       z_star=z_star, record_every=1)
+        res = solve(problem, "ssda", steps=passes, record_every=1,
+                    **tune["ssda"])
         out["SSDA"] = res.dist2
-    else:
-        res = run_extra(spec, data, w, 0.5, lam, passes, z_star=z_star,
-                        record_every=1)
-        out["EXTRA"] = res.dist2
 
-    # communication: DOUBLEs at the hottest node per effective pass
+    # communication: DOUBLEs at the hottest node per effective pass — the
+    # dense numbers straight from the SolveResult accounting
     comm = {}
-    dense = int(dense_doubles_per_iter(graph, data.d + spec.tail_dim).max())
-    sparse = sparse_doubles_per_iter(data.n_nodes, data.k, spec.tail_dim)
+    dense = int(det.doubles_received[-1].max() // det.iters[-1])
+    sparse = sparse_doubles_per_iter(data.n_nodes, data.k, problem.spec.tail_dim)
     comm["DSBA-s"] = sparse * q
     comm["DSBA(dense)"] = dense * q
     comm["DSA-s"] = sparse * q
     comm["EXTRA/DLM/SSDA"] = dense
-    return data, out, comm
+    return problem, out, comm
 
 
 def render(task: str, passes: int = 120) -> str:
-    data, out, comm = run_all(task, passes)
+    """Markdown table of dist2 vs passes and vs DOUBLE budget for one task."""
+    problem, out, comm = run_all(task, passes)
+    data = problem.data
     lines = [
         f"### {task} (d={data.d}, rho={data.rho:.4f}, N={data.n_nodes}, "
         f"q={data.q})",
@@ -146,6 +144,7 @@ def render(task: str, passes: int = 120) -> str:
 
 
 def main(passes: int = 120):
+    """Render + write the three per-task experiment tables."""
     OUT.mkdir(exist_ok=True, parents=True)
     for task in ("ridge", "logistic", "auc"):
         md = render(task, passes)

@@ -3,18 +3,21 @@
 The paper's headline: DSBA's iteration complexity is LINEAR in the problem
 condition number kappa, while DSA's has kappa^4 and EXTRA's kappa^2 terms.
 We sweep kappa via the regularizer (kappa ~ L/lam) and report iterations to
-reach dist^2 <= eps for each method at its tuned step size. The measured
+reach dist^2 <= eps for each method at its tuned step size — every run
+through ``core.solvers.solve``, the registry's one entrypoint. The measured
 growth of iterations with kappa separates the methods exactly as Table 1
 predicts.
 """
 from __future__ import annotations
 
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
 import numpy as np
 
-from repro.core import mixing, reference
-from repro.core.baselines import run_extra
-from repro.core.dsba import DSBAConfig, run
-from repro.core.operators import OperatorSpec
+from repro.core import mixing
+from repro.core.solvers import make_problem, solve
 from repro.data.synthetic import make_regression
 
 EPS = 1e-10
@@ -32,23 +35,22 @@ def main():
     n, q, d, k = 6, 30, 200, 8
     data = make_regression(n, q, d, k=k, seed=0)
     graph = mixing.erdos_renyi_graph(n, 0.4, seed=1)
-    w = mixing.laplacian_mixing(graph)
-    spec = OperatorSpec("ridge")
 
     print(f"{'lam':>8} {'~kappa':>8} {'DSBA iters':>11} {'DSA iters':>10} "
           f"{'EXTRA iters':>12}")
     rows = []
     for lam in (1e-1, 1e-2, 1e-3):
         kappa = (0.25 + lam) / lam  # L ~ max eig of per-sample op ~ ||a||^2
-        z_star = reference.solve_root(spec, data, lam)
-        r_b = run(DSBAConfig(spec, 1.0, lam), data, w, MAX_PASSES * q,
-                  z_star=z_star, record_every=q)
+        problem = make_problem("ridge", data, graph, lam=lam)
+        problem.solve_star()
+        r_b = solve(problem, "dsba", steps=MAX_PASSES * q, record_every=q,
+                    alpha=1.0)
         it_b = iters_to_eps(r_b.dist2, q)
-        r_a = run(DSBAConfig(spec, 0.15, lam, method="dsa"), data, w,
-                  MAX_PASSES * q, z_star=z_star, record_every=q)
+        r_a = solve(problem, "dsa", steps=MAX_PASSES * q, record_every=q,
+                    alpha=0.15)
         it_a = iters_to_eps(r_a.dist2, q)
-        r_e = run_extra(spec, data, w, 0.3, lam, MAX_PASSES * 4,
-                        z_star=z_star, record_every=4)
+        r_e = solve(problem, "extra", steps=MAX_PASSES * 4, record_every=4,
+                    alpha=0.3)
         it_e = iters_to_eps(r_e.dist2, 4)
         fmt = lambda v: f"{v}" if v else f">{MAX_PASSES * q}"
         print(f"{lam:8.0e} {kappa:8.0f} {fmt(it_b):>11} {fmt(it_a):>10} "

@@ -12,7 +12,8 @@ their forward twins).
 
 --bench-group picks which families run (docs/benchmarks.md):
   kernels      dsba step + kernel fwd/bwd + gossip step (the CI gate grid)
-  convergence  the paper's convergence/communication tables
+  convergence  solve() entrypoint timings (`solve_*`) + the paper's
+               convergence/communication tables
   all          both (default)
 """
 from __future__ import annotations
@@ -147,12 +148,45 @@ def bench_comm_table(rows):
     data, graph, steady, res = BCm.measure()
     dt = (time.perf_counter() - t0) * 1e6
     model = sparse_doubles_per_iter(data.n_nodes, data.k, 0)
-    ok = (steady == model).all() and res.recon_max_err < 1e-9
+    err = res.extras["recon_max_err"]
+    ok = (steady == model).all() and err < 1e-9
     rows.append((
         "paper_table1_comm", dt,
-        f"measured==model({model})={bool(ok)} "
-        f"recon_err={res.recon_max_err:.1e}",
+        f"measured==model({model})={bool(ok)} recon_err={err:.1e}",
     ))
+
+
+def bench_solvers(rows):
+    """Time the registry entrypoint itself: `solve()` per method x comm.
+
+    One small shared ridge problem; entries report us per solve() call at a
+    fixed step count — the END-TO-END cost a consumer of the one-solver API
+    pays, deliberately including the per-call trace+compile (each solve()
+    bakes fresh step closures, so nothing is amortized across calls).
+    """
+    from repro.core import mixing
+    from repro.core.dsba import draw_indices
+    from repro.core.solvers import make_problem, solve
+    from repro.data.synthetic import make_regression
+
+    n, q, d, k, steps = 8, 20, 200, 8, 200
+    data = make_regression(n, q, d, k=k, seed=0)
+    graph = mixing.erdos_renyi_graph(n, 0.4, seed=1)
+    problem = make_problem("ridge", data, graph, lam=1e-3)
+    idx = draw_indices(steps, n, q, seed=3)
+
+    grid = (
+        ("solve_dsba_dense", "dsba", "dense", steps),
+        ("solve_dsba_sparse", "dsba", "sparse", steps),
+        ("solve_extra_dense", "extra", "dense", steps),
+    )
+    def one(method, comm, nsteps):
+        return solve(problem, method, comm=comm, steps=nsteps,
+                     record_every=nsteps, indices=idx)
+
+    for name, method, comm, nsteps in grid:
+        us = timeit(one, method, comm, nsteps, n=3)
+        rows.append((name, us, f"N={n} d={d} steps={nsteps}"))
 
 
 def main():
@@ -177,6 +211,7 @@ def main():
         bench_kernels(rows, args.fast)
         bench_gossip(rows)
     if args.bench_group in ("convergence", "all"):
+        bench_solvers(rows)
         bench_comm_table(rows)
         bench_convergence_tables(rows, args.fast)
 

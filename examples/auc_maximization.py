@@ -14,24 +14,20 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np
 
 from repro.core import mixing, reference
-from repro.core.dsba import DSBAConfig, run
-from repro.core.operators import OperatorSpec
+from repro.core.solvers import make_problem, solve
 from repro.data.synthetic import make_classification
 
 
-def main():
+def main(passes=30, record_passes=2):
     N, q, d = 10, 50, 300
     data = make_classification(N, q, d, k=10, positive_ratio=0.25, seed=0)
     graph = mixing.erdos_renyi_graph(N, 0.4, seed=1)
-    W = mixing.laplacian_mixing(graph)
-    p = data.positive_ratio()
-    spec = OperatorSpec("auc", p=p)
-    lam = 1.0 / (10 * data.total)
-    z_star = reference.solve_root(spec, data, lam)
+    problem = make_problem("auc", data, graph)  # z = [w; a; b; theta]
+    z_star = problem.solve_star()
+    p = problem.spec.p
 
-    cfg = DSBAConfig(spec, alpha=1.0, lam=lam)
-    res = run(cfg, data, W, steps=30 * q, z_star=z_star, record_every=2 * q,
-              keep_snapshots=True)
+    res = solve(problem, "dsba", steps=passes * q, record_every=record_passes * q,
+                alpha=1.0, keep_snapshots=True)
 
     print(f"positive ratio p = {p:.3f};  z in R^{d + 3} = [w; a; b; theta]")
     print(f"{'passes':>7} {'dist^2 to saddle':>18} {'AUC (node mean)':>16}")
@@ -41,6 +37,7 @@ def main():
         print(f"{it // q:7d} {d2:18.3e} {auc:16.4f}")
     auc_star = reference.auc_score(z_star[:d], data)
     print(f"\nAUC at the exact saddle point: {auc_star:.4f}")
+    return res
 
 
 if __name__ == "__main__":

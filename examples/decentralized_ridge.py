@@ -2,6 +2,11 @@
 sparse ridge regression, reporting suboptimality vs effective passes AND
 communication cost C_max (DOUBLEs received by the hottest node).
 
+Every method runs through the one registry entrypoint
+``core.solvers.solve``; the communication numbers come straight from the
+uniform ``SolveResult.doubles_received`` accounting (closed-form relay
+accounting for the sparse runs, deg*d dense exchange otherwise).
+
     PYTHONPATH=src python examples/decentralized_ridge.py [--dataset small]
 """
 import argparse
@@ -11,56 +16,52 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 
-from repro.core import mixing, reference
-from repro.core.baselines import run_dlm, run_extra, run_ssda
-from repro.core.dsba import DSBAConfig, run
-from repro.core.operators import OperatorSpec
-from repro.core.sparse_comm import dense_doubles_per_iter, sparse_doubles_per_iter
+from repro.core import mixing
+from repro.core.solvers import make_problem, solve
+from repro.core.sparse_comm import sparse_doubles_per_iter
 from repro.data.synthetic import DATASET_PRESETS, make_regression
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="small", choices=list(DATASET_PRESETS))
     ap.add_argument("--q", type=int, default=50)
     ap.add_argument("--passes", type=int, default=40)
-    args = ap.parse_args()
+    ap.add_argument("--d", type=int, default=None,
+                    help="override the preset dimension (smoke tests)")
+    args = ap.parse_args(argv)
 
     p = DATASET_PRESETS[args.dataset]
-    d = min(p["d"], 4000)  # cap for the CPU reference solve
+    d = min(p["d"], 4000) if args.d is None else args.d  # cap: CPU ref solve
+    k = min(p["k"], max(1, d // 2))
     N = 10
-    data = make_regression(N, args.q, d, k=p["k"], seed=0)
+    data = make_regression(N, args.q, d, k=k, seed=0)
     graph = mixing.erdos_renyi_graph(N, 0.4, seed=1)
-    W = mixing.laplacian_mixing(graph)
-    spec = OperatorSpec("ridge")
-    lam = 1.0 / (10 * data.total)
-    z_star = reference.solve_root(spec, data, lam)
+    problem = make_problem("ridge", data, graph)  # lam = 1/(10 Q)
+    problem.solve_star()
 
     q = data.q
     stoch_steps = args.passes * q  # 1 effective pass = q stochastic steps
     det_steps = args.passes  # deterministic methods touch all data per step
 
     results = {}
-    res = run(DSBAConfig(spec, 0.5, lam), data, W, stoch_steps,
-              z_star=z_star, record_every=q)
+    res = solve(problem, "dsba", steps=stoch_steps, record_every=q, alpha=0.5)
     results["DSBA"] = (res.iters / q, res.dist2)
-    res = run(DSBAConfig(spec, 0.2, lam, method="dsa"), data, W, stoch_steps,
-              z_star=z_star, record_every=q)
+    res = solve(problem, "dsa", steps=stoch_steps, record_every=q, alpha=0.2)
     results["DSA"] = (res.iters / q, res.dist2)
-    res = run_extra(spec, data, W, alpha=0.3, lam=lam, steps=det_steps,
-                    z_star=z_star, record_every=1)
+    res = solve(problem, "extra", steps=det_steps, record_every=1, alpha=0.3)
     results["EXTRA"] = (res.iters, res.dist2)
-    res = run_dlm(spec, data, graph, c=0.3, beta=1.0, lam=lam, steps=det_steps,
-                  z_star=z_star, record_every=1)
+    res = solve(problem, "dlm", steps=det_steps, record_every=1, c=0.3, beta=1.0)
     results["DLM"] = (res.iters, res.dist2)
     # SSDA's dual step must satisfy eta < 2*lam/||I-W||: tiny at the
     # paper's lambda = 1/(10Q) conditioning
-    res = run_ssda(spec, data, W, eta=1e-4, momentum=0.0, lam=lam,
-                   steps=det_steps, z_star=z_star, record_every=1)
+    res = solve(problem, "ssda", steps=det_steps, record_every=1,
+                eta=1e-4, momentum=0.0)
     results["SSDA"] = (res.iters, res.dist2)
+    dense_res = res  # any dense run carries the deg*d accounting
 
     print(f"\ndataset={args.dataset} d={d} rho={data.rho:.4f} "
-          f"N={N} q={q} lam={lam:.2e}")
+          f"N={N} q={q} lam={problem.lam:.2e}")
     print(f"{'passes':>7}", *[f"{m:>12}" for m in results])
     idx = range(0, args.passes, max(1, args.passes // 10))
     for i in idx:
@@ -70,14 +71,17 @@ def main():
             row.append(f"{ys[j]:12.2e}")
         print(*row)
 
-    # communication cost per effective pass (DOUBLEs at the hottest node)
-    dense = int(dense_doubles_per_iter(graph, d).max())
+    # communication cost per effective pass (DOUBLEs at the hottest node):
+    # dense methods from the SolveResult accounting, DSBA-s from the relay's
+    # closed-form steady state
+    dense = int(dense_res.doubles_received[-1].max() // dense_res.iters[-1])
     sparse = sparse_doubles_per_iter(N, data.k, 0)
     print("\ncommunication per effective pass (hottest node, DOUBLEs):")
     print(f"  dense methods (EXTRA/DLM/SSDA): {dense}  (deg*d per iter x 1)")
     print(f"  DSBA/DSA dense exchange       : {dense * q}")
     print(f"  DSBA-s sparse exchange        : {sparse * q}   "
           f"({dense * q / (sparse * q):.1f}x less than dense stochastic)")
+    return results
 
 
 if __name__ == "__main__":

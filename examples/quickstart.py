@@ -1,4 +1,4 @@
-"""Quickstart: decentralized ridge regression with DSBA in ~30 lines.
+"""Quickstart: decentralized ridge regression with DSBA in ~20 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,25 +7,30 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 
-from repro.core import mixing, reference
-from repro.core.dsba import DSBAConfig, run
-from repro.core.operators import OperatorSpec
+from repro.core import mixing
+from repro.core.solvers import make_problem, solve
 from repro.data.synthetic import make_regression
 
-# 10 nodes, Erdos-Renyi(0.4) topology — the paper's setup (Section 7)
-N, Q_PER_NODE, DIM = 10, 50, 200
-data = make_regression(n_nodes=N, q=Q_PER_NODE, d=DIM, k=10, seed=0)
-graph = mixing.erdos_renyi_graph(N, 0.4, seed=1)
-W = mixing.laplacian_mixing(graph)
 
-spec = OperatorSpec("ridge")
-lam = 1.0 / (10 * data.total)  # paper: lambda = 1/(10 Q)
-z_star = reference.solve_root(spec, data, lam)
+def main(steps=8000, record_every=500):
+    # 10 nodes, Erdos-Renyi(0.4) topology — the paper's setup (Section 7)
+    N, Q_PER_NODE, DIM = 10, 50, 200
+    data = make_regression(n_nodes=N, q=Q_PER_NODE, d=DIM, k=10, seed=0)
+    graph = mixing.erdos_renyi_graph(N, 0.4, seed=1)
 
-cfg = DSBAConfig(spec=spec, alpha=2.0, lam=lam)  # backward steps: large alpha is stable
-res = run(cfg, data, W, steps=8000, z_star=z_star, record_every=500)
+    problem = make_problem("ridge", data, graph)  # lam = 1/(10 Q), W Laplacian
+    problem.solve_star()  # centralized root, cached on the problem
 
-print("iter   mean ||z_n - z*||^2      consensus error")
-for it, d2, ce in zip(res.iters, res.dist2, res.consensus):
-    print(f"{it:5d}   {d2:20.3e}   {ce:16.3e}")
-print(f"\nlinear convergence to the centralized optimum: {res.dist2[-1]:.2e}")
+    # backward steps: large alpha is stable
+    res = solve(problem, method="dsba", steps=steps,
+                record_every=record_every, alpha=2.0)
+
+    print("iter   mean ||z_n - z*||^2      consensus error")
+    for it, d2, ce in zip(res.iters, res.dist2, res.consensus):
+        print(f"{it:5d}   {d2:20.3e}   {ce:16.3e}")
+    print(f"\nlinear convergence to the centralized optimum: {res.dist2[-1]:.2e}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

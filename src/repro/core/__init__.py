@@ -1,8 +1,17 @@
-# The paper's primary contribution: DSBA (Decentralized Stochastic Backward
-# Aggregation) and its substrate — monotone operators, mixing matrices,
-# baselines, sparse communication, and the pod-axis gossip generalization.
+"""The paper's primary contribution and its substrate.
+
+DSBA (Decentralized Stochastic Backward Aggregation) plus monotone
+operators, mixing matrices, deterministic baselines, the sparse
+communication relay, and the pod-axis gossip generalization. The public
+run entrypoint is ``core.solvers.solve`` (Problem + SolverSpec registry);
+``dsba.run`` and the ``baselines.run_*`` wrappers are deprecated shims.
+"""
 from repro.core.operators import OperatorSpec  # noqa: F401
 from repro.core.dsba import (  # noqa: F401
-    DSBAConfig, DSBAState, dsba_step, init_state, run,
+    DSBAConfig, DSBAState, dsba_step, init_state,
 )
-from repro.core import mixing, baselines, reference  # noqa: F401
+from repro.core.solvers import (  # noqa: F401
+    Problem, SolveResult, SolverSpec, available_solvers, get_solver,
+    make_problem, register_solver, solve,
+)
+from repro.core import mixing, baselines, reference, solvers  # noqa: F401

@@ -1,4 +1,12 @@
-"""Deterministic decentralized baselines the paper compares against (Table 1).
+"""Deprecated shims for the deterministic baselines (EXTRA / DLM / SSDA).
+
+The implementations live in the ``core.solvers`` registry now (entries
+``extra``, ``dlm``, ``ssda``); ``core.solvers.solve`` is the one run
+entrypoint. These wrappers keep the legacy signatures alive for external
+callers, emit ``DeprecationWarning``, and are pinned trace-identical to
+``solve(method=..., comm="dense")`` by ``tests/test_solvers.py``.
+
+Background (paper Table 1):
 
   EXTRA  (Shi et al. 2015a)    — eq. (47) form: exact first-order correction
   DLM    (Ling et al. 2015)    — linearized decentralized ADMM
@@ -8,59 +16,49 @@
 All of them evaluate FULL local gradients/operators each iteration (cost
 O(rho q d) per node) and exchange dense d-vectors with neighbors (cost
 O(Delta(G) d)) — the two costs DSBA improves on.
-
-All methods run on the same mixing matrix W. Dense features per node
-(moderate d; the reference experiments match this).
 """
 from __future__ import annotations
 
+import warnings
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mixing import Graph, w_tilde
-from repro.core.operators import OperatorSpec
 from repro.core.dsba import RunResult
+from repro.core.mixing import Graph
+from repro.core.operators import OperatorSpec
+from repro.core import solvers
 
 
-def _full_op(spec: OperatorSpec, feats, labels, lam):
-    """G(Z): (N, D) -> (N, D), full local operator incl. regularizer."""
-    t = spec.tail_dim
-    d = feats.shape[-1]
-
-    def G(Z):
-        head, tail = Z[:, :d], Z[:, d:]
-        u = jnp.einsum("nqd,nd->nq", feats, head)
-        tails = jnp.broadcast_to(tail[:, None, :], u.shape + (t,))
-        g, tail_out = spec.coeff_and_tail(u, labels, tails)
-        out_head = jnp.einsum("nq,nqd->nd", g, feats) / feats.shape[1]
-        if t:
-            out = jnp.concatenate([out_head, tail_out.mean(1)], axis=1)
-        else:
-            out = out_head
-        return out + lam * Z
-
-    return G
+def _deprecated(name: str, method: str) -> None:
+    warnings.warn(
+        f"core.baselines.{name} is deprecated; use core.solvers.solve("
+        f"problem, method={method!r}, comm='dense') instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
-def _metrics_loop(step_fn, z_of, state, steps, record_every, z_star):
-    iters, dist2, cons = [], [], []
-    for it in range(1, steps + 1):
-        state = step_fn(state)
-        if it % record_every == 0 or it == steps:
-            z = np.asarray(z_of(state))
-            zbar = z.mean(0, keepdims=True)
-            cons.append(float(np.mean(np.sum((z - zbar) ** 2, -1))))
-            if z_star is not None:
-                dist2.append(float(np.mean(np.sum((z - z_star[None]) ** 2, -1))))
-            iters.append(it)
-    return state, np.asarray(iters), np.asarray(dist2), np.asarray(cons)
+def _legacy_solve(
+    method: str,
+    spec: OperatorSpec,
+    data,
+    graph: Graph,
+    w: np.ndarray | None,
+    lam: float,
+    steps: int,
+    z_star: np.ndarray | None,
+    record_every: int,
+    **hp,
+) -> RunResult:
+    problem = solvers.Problem(
+        spec=spec, data=data, graph=graph, w=w, lam=lam, z_star=z_star
+    )
+    res = solvers.solve(
+        problem, method=method, comm="dense", steps=steps,
+        record_every=record_every, **hp,
+    )
+    return RunResult(res.state, res.iters, res.dist2, res.consensus, res.zs)
 
-
-# ---------------------------------------------------------------------------
-# EXTRA
-# ---------------------------------------------------------------------------
 
 def run_extra(
     spec: OperatorSpec,
@@ -72,35 +70,14 @@ def run_extra(
     z_star: np.ndarray | None = None,
     record_every: int = 1,
 ) -> RunResult:
-    feats = jnp.asarray(data.dense())
-    labels = jnp.asarray(data.y)
-    G = _full_op(spec, feats, labels, lam)
-    n, D = data.n_nodes, data.d + spec.tail_dim
-    dt = feats.dtype
-    wj = jnp.asarray(w, dt)
-    wtj = jnp.asarray(w_tilde(w), dt)
-
-    @jax.jit
-    def step(carry):
-        z, z_prev, g_prev, t = carry
-        g = G(z)
-        z1 = jnp.where(
-            t == 0,
-            wj @ z - alpha * g,
-            z + wj @ z - wtj @ z_prev - alpha * (g - g_prev),
-        )
-        return (z1, z, g, t + 1)
-
-    state = (jnp.zeros((n, D), dt), jnp.zeros((n, D), dt), jnp.zeros((n, D), dt), 0)
-    state, iters, dist2, cons = _metrics_loop(
-        step, lambda s: s[0], state, steps, record_every, z_star
+    """Deprecated: ``solve(problem, method="extra")`` replaces this."""
+    _deprecated("run_extra", "extra")
+    graph = solvers.graph_from_mixing(w)
+    return _legacy_solve(
+        "extra", spec, data, graph, w, lam, steps, z_star, record_every,
+        alpha=alpha,
     )
-    return RunResult(state, iters, dist2, cons, None)
 
-
-# ---------------------------------------------------------------------------
-# DLM — linearized decentralized ADMM
-# ---------------------------------------------------------------------------
 
 def run_dlm(
     spec: OperatorSpec,
@@ -113,34 +90,13 @@ def run_dlm(
     z_star: np.ndarray | None = None,
     record_every: int = 1,
 ) -> RunResult:
-    feats = jnp.asarray(data.dense())
-    labels = jnp.asarray(data.y)
-    G = _full_op(spec, feats, labels, lam)
-    n, D = data.n_nodes, data.d + spec.tail_dim
-    dt = feats.dtype
-    lap = jnp.asarray(graph.laplacian, dt)
-    deg = jnp.asarray(graph.degrees, dt)[:, None]
-
-    @jax.jit
-    def step(carry):
-        z, lam_dual = carry
-        grad_aug = G(z) + lam_dual + 2.0 * c * (lap @ z)
-        z1 = z - grad_aug / (2.0 * c * deg + beta)
-        lam1 = lam_dual + c * (lap @ z1)
-        return (z1, lam1)
-
-    state = (jnp.zeros((n, D), dt), jnp.zeros((n, D), dt))
-    state, iters, dist2, cons = _metrics_loop(
-        step, lambda s: s[0], state, steps, record_every, z_star
+    """Deprecated: ``solve(problem, method="dlm")`` replaces this."""
+    _deprecated("run_dlm", "dlm")
+    return _legacy_solve(
+        "dlm", spec, data, graph, None, lam, steps, z_star, record_every,
+        c=c, beta=beta,
     )
-    return RunResult(state, iters, dist2, cons, None)
 
-
-# ---------------------------------------------------------------------------
-# SSDA — accelerated dual ascent. Needs grad f*_n: for ridge we precompute
-# per-node Cholesky factors; for other losses we invert grad f_n with an
-# inner damped-Newton solve (matrix-free, CG).
-# ---------------------------------------------------------------------------
 
 def run_ssda(
     spec: OperatorSpec,
@@ -154,61 +110,10 @@ def run_ssda(
     record_every: int = 1,
     inner_newton: int = 8,
 ) -> RunResult:
-    if spec.tail_dim:
-        raise NotImplementedError(
-            "SSDA requires grad f*; the paper notes it does not apply to AUC"
-        )
-    feats = jnp.asarray(data.dense())  # (N, q, d)
-    labels = jnp.asarray(data.y)
-    n, q, d = feats.shape
-    dt = feats.dtype
-    wj = jnp.asarray(w, dt)
-    i_minus_w = jnp.eye(n, dtype=dt) - wj
-
-    if spec.kind == "ridge":
-        # grad f_n(x) = A^T(Ax - y)/q + lam x ; grad f*_n(s) solves it = s
-        gram = jnp.einsum("nqd,nqe->nde", feats, feats) / q
-        gram = gram + lam * jnp.eye(d, dtype=dt)[None]
-        rhs0 = jnp.einsum("nqd,nq->nd", feats, labels) / q
-        chol = jax.vmap(jnp.linalg.cholesky)(gram)
-
-        def conj_grad(S):  # (N, d) -> (N, d): x_n = grad f*_n(s_n)
-            return jax.vmap(
-                lambda L, r: jax.scipy.linalg.cho_solve((L, True), r)
-            )(chol, S + rhs0)
-
-    else:
-
-        def conj_grad(S):
-            # invert grad f_n via damped Newton with explicit per-node jacobians
-            def one(fe, la, s):
-                def gn(x):
-                    u = fe @ x
-                    g, _ = spec.coeff_and_tail(u, la, jnp.zeros((q, 0), dt))
-                    return fe.T @ g / q + lam * x
-
-                x = jnp.zeros((d,), dt)
-                jac = jax.jacfwd(gn)
-                for _ in range(inner_newton):
-                    x = x - jnp.linalg.solve(jac(x), gn(x) - s)
-                return x
-
-            return jax.vmap(one)(feats, labels, S)
-
-    @jax.jit
-    def step(carry):
-        m, m_prev = carry
-        v = m + momentum * (m - m_prev)
-        x = conj_grad(-v)  # primal read-out: grad f*(-(U Lambda)_n)
-        m1 = v + eta * (i_minus_w @ x)
-        return (m1, m)
-
-    state = (jnp.zeros((n, d), dt), jnp.zeros((n, d), dt))
-
-    def z_of(s):
-        return conj_grad(-s[0])
-
-    state, iters, dist2, cons = _metrics_loop(
-        step, z_of, state, steps, record_every, z_star
+    """Deprecated: ``solve(problem, method="ssda")`` replaces this."""
+    _deprecated("run_ssda", "ssda")
+    graph = solvers.graph_from_mixing(w)
+    return _legacy_solve(
+        "ssda", spec, data, graph, w, lam, steps, z_star, record_every,
+        eta=eta, momentum=momentum, inner_newton=inner_newton,
     )
-    return RunResult(state, iters, dist2, cons, None)

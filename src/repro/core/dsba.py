@@ -57,6 +57,8 @@ class DSBAState:
 
 @dataclasses.dataclass(frozen=True)
 class DSBAConfig:
+    """Algorithm-1 step configuration (operator family, step size, reg)."""
+
     spec: OperatorSpec
     alpha: float  # step size
     lam: float = 0.0  # l2 regularization
@@ -262,6 +264,8 @@ def draw_indices(steps: int, n_nodes: int, q: int, seed: int = 0) -> np.ndarray:
 
 @dataclasses.dataclass
 class RunResult:
+    """Legacy result shape of `run` and the `core.baselines.run_*` shims."""
+
     state: DSBAState
     iters: np.ndarray  # iteration counts at record points
     dist2: np.ndarray  # mean_n ||z_n - z*||^2 (if z_star given)
@@ -281,48 +285,46 @@ def run(
     keep_snapshots: bool = False,
     indices: np.ndarray | None = None,
 ) -> RunResult:
-    """Run DSBA/DSA for `steps` iterations, recording metrics periodically.
+    """Deprecated: ``core.solvers.solve(problem, method=cfg.method)``.
+
+    Thin shim over the registry entrypoint, kept for legacy callers and
+    pinned bit-identical by ``tests/test_solvers.py``. The communication
+    graph is recovered from the support of ``w`` (Section 4's sparsity
+    condition makes the two equivalent). One semantic nit versus the
+    original loop: when ``steps`` is not a multiple of ``record_every`` the
+    trailing remainder iterations now run (and are recorded) instead of
+    being silently dropped.
 
     indices: optional (steps, N) pre-drawn sample indices (replayable runs).
     """
-    spec = cfg.spec
-    n = data.n_nodes
-    dtot = data.d + spec.tail_dim
-    dt = data.val.dtype
-    if z0 is None:
-        z0 = np.zeros((n, dtot), dtype=dt)
-    state = init_state(cfg, data, jnp.asarray(z0))
-    step = make_step_fn(cfg, data, w)
+    import warnings
 
-    @jax.jit
-    def chunk(state, idx_block):
-        def body(st, i_t):
-            return step(st, i_t), None
+    from repro.core import solvers
 
-        st, _ = jax.lax.scan(body, state, idx_block)
-        return st
-
-    if indices is None:
-        indices = draw_indices(steps, n, data.q, seed)
-    indices = jnp.asarray(indices, jnp.int32)
-
-    zstar_j = None if z_star is None else jnp.asarray(z_star, dtype=dt)
-    iters, dist2, cons, zs = [], [], [], []
-    n_chunks = max(1, steps // record_every)
-    for c in range(n_chunks):
-        state = chunk(state, indices[c * record_every : (c + 1) * record_every])
-        z = state.z
-        zbar = z.mean(0, keepdims=True)
-        cons.append(float(jnp.mean(jnp.sum((z - zbar) ** 2, -1))))
-        if zstar_j is not None:
-            dist2.append(float(jnp.mean(jnp.sum((z - zstar_j[None]) ** 2, -1))))
-        iters.append((c + 1) * record_every)
-        if keep_snapshots:
-            zs.append(np.asarray(z))
-    return RunResult(
-        state=state,
-        iters=np.asarray(iters),
-        dist2=np.asarray(dist2) if dist2 else np.zeros(0),
-        consensus=np.asarray(cons),
-        zs=np.stack(zs) if zs else None,
+    warnings.warn(
+        "core.dsba.run is deprecated; use core.solvers.solve("
+        f"problem, method={cfg.method!r}) instead",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    problem = solvers.Problem(
+        spec=cfg.spec,
+        data=data,
+        graph=solvers.graph_from_mixing(w),
+        w=w,
+        lam=cfg.lam,
+        z_star=z_star,
+    )
+    res = solvers.solve(
+        problem,
+        method=cfg.method,
+        comm="dense",
+        steps=steps,
+        record_every=record_every,
+        seed=seed,
+        z0=z0,
+        indices=indices,
+        keep_snapshots=keep_snapshots,
+        alpha=cfg.alpha,
+    )
+    return RunResult(res.state, res.iters, res.dist2, res.consensus, res.zs)

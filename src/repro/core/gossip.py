@@ -59,6 +59,8 @@ from repro.train.step import TrainConfig, local_grads
 
 @dataclasses.dataclass(frozen=True)
 class GossipConfig:
+    """Pod-axis decentralized-training setup: topology, mode, compression."""
+
     n_pods: int = 2
     topology: str = "ring"  # ring | exponential | allreduce
     mode: str = "dsba"  # dsba | dsgd | allreduce
@@ -75,6 +77,7 @@ class GossipConfig:
     seed: int = 0
 
     def graph_and_weights(self) -> tuple[MX.Graph, np.ndarray]:
+        """Pod graph + Laplacian mixing matrix for this topology."""
         g, w = MX.make_pod_mixing(self.n_pods, self.topology
                                   if self.topology != "allreduce" else "ring",
                                   self.seed)
@@ -139,11 +142,13 @@ def block_topk_compress(
 
 
 def scatter_decompress(shape, vals: jax.Array, idx: jax.Array) -> jax.Array:
+    """Inverse of the top-k wire format: scatter (vals, idx) into `shape`."""
     out = jnp.zeros((int(np.prod(shape)),), vals.dtype)
     return out.at[idx].add(vals).reshape(shape)
 
 
 def leaf_k(leaf_shape, ratio: float) -> int:
+    """Per-leaf top-k count for a compression ratio (at least 1)."""
     n = int(np.prod(leaf_shape))
     return max(1, int(n * ratio))
 
@@ -442,6 +447,7 @@ def make_gossip_train_step(mesh, cfg: ModelConfig, tc: TrainConfig,
 
 
 def gossip_batch_specs(cfg: ModelConfig) -> dict:
+    """PartitionSpecs of the per-pod batch dict (pod axis leads)."""
     spec = {"tokens": P("pod", "data"), "targets": P("pod", "data")}
     if cfg.family == "encdec":
         spec["enc_embeds"] = P("pod", "data", None, None)

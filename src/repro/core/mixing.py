@@ -26,12 +26,14 @@ class Graph:
     edges: tuple[tuple[int, int], ...]  # (i, j) with i < j, no self loops
 
     def __post_init__(self):
+        """Validate edge endpoints against the node range."""
         for i, j in self.edges:
             if not (0 <= i < j < self.n):
                 raise ValueError(f"bad edge ({i},{j}) for n={self.n}")
 
     @property
     def adjacency(self) -> np.ndarray:
+        """(n, n) symmetric 0/1 adjacency matrix."""
         a = np.zeros((self.n, self.n), dtype=np.float64)
         for i, j in self.edges:
             a[i, j] = a[j, i] = 1.0
@@ -39,23 +41,28 @@ class Graph:
 
     @property
     def laplacian(self) -> np.ndarray:
+        """Graph Laplacian L = D - A."""
         a = self.adjacency
         return np.diag(a.sum(1)) - a
 
     @property
     def degrees(self) -> np.ndarray:
+        """(n,) per-node degree vector."""
         return self.adjacency.sum(1).astype(np.int64)
 
     @property
     def max_degree(self) -> int:
+        """Delta(G), the paper's dense per-iteration communication factor."""
         return int(self.degrees.max())
 
     def neighbors(self, n: int) -> list[int]:
+        """Nodes adjacent to `n` (unsorted)."""
         return [j for i, j in self.edges if i == n] + [
             i for i, j in self.edges if j == n
         ]
 
     def is_connected(self) -> bool:
+        """BFS reachability of every node from node 0."""
         seen = {0}
         frontier = [0]
         adj = {i: self.neighbors(i) for i in range(self.n)}
@@ -85,10 +92,12 @@ class Graph:
 
     @property
     def diameter(self) -> int:
+        """max_{u,v} xi(u, v) — the relay protocol's warm-up horizon."""
         return int(max(self.distances_from(s).max() for s in range(self.n)))
 
 
 def ring_graph(n: int) -> Graph:
+    """Cycle over n nodes (diameter n//2 — the deepest standard relay)."""
     if n < 2:
         raise ValueError("ring needs n >= 2")
     if n == 2:
@@ -98,6 +107,7 @@ def ring_graph(n: int) -> Graph:
 
 
 def complete_graph(n: int) -> Graph:
+    """All-to-all graph (diameter 1)."""
     return Graph(n, tuple((i, j) for i in range(n) for j in range(i + 1, n)))
 
 
@@ -210,6 +220,7 @@ def graph_gamma(w: np.ndarray) -> float:
 
 
 def graph_condition_number(w: np.ndarray) -> float:
+    """kappa_g = 1/gamma (Theorem 6.1's graph condition number)."""
     return 1.0 / graph_gamma(w)
 
 

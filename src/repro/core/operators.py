@@ -51,6 +51,7 @@ def logistic_coeff(u, y):
 
 
 def logistic_coeff_prime(u, y):
+    """d/du of `logistic_coeff` (the Newton denominator of eq. 73)."""
     e = logistic_coeff(u, y)
     # de/du = -y*e - e^2   (verified against eq. 73's denominator)
     return -y * e - e * e
@@ -66,6 +67,7 @@ def logistic_coeff_prime(u, y):
 # ---------------------------------------------------------------------------
 
 def ridge_resolvent_coeff(s, y, a_eff, xsq):
+    """Closed-form scalar resolvent of the ridge operator (Section 7.1)."""
     u = (s + a_eff * y * xsq) / (1.0 + a_eff * xsq)
     return ridge_coeff(u, y)
 
@@ -180,6 +182,7 @@ class OperatorSpec:
 
     @property
     def tail_dim(self) -> int:
+        """Trailing dense coordinates of z: 3 for AUC's (a, b, theta), else 0."""
         return 3 if self.kind == "auc" else 0
 
     def coeff_and_tail(self, u, y, tail):

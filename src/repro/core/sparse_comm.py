@@ -1,5 +1,10 @@
 """DSBA-s: the sparse-communication implementation of Section 5.1.
 
+This module is the ``comm="sparse"`` backend of the solver registry —
+callers go through ``core.solvers.solve(problem, method, comm="sparse")``,
+which forwards backend options (``engine``, ``verify``, ``use_pallas``)
+into `run_sparse` and folds its accounting into the uniform SolveResult.
+
 Every iteration each node broadcasts ONLY its sparse update difference
 delta_n^t (eq. 27) — nnz = one data sample's pattern — and every other node
 reconstructs the delayed network state from received deltas via the update
@@ -84,7 +89,8 @@ class SparseRunResult:
     """What `run_sparse` returns — the module's output contract.
 
     z_trace is the TRUE trajectory (identical across engines and to a dense
-    `core.dsba.run` with the same index stream — pinned by parity tests);
+    `solve(..., comm="dense")` run with the same index stream — pinned by
+    parity tests);
     doubles/ints are the paper's C_max message accounting (doubles exclude
     index ints by convention); recon_max_err is nan unless `verify=True`
     (the fast path does not carry the truth ring).

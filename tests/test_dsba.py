@@ -1,9 +1,10 @@
-"""End-to-end convergence of DSBA (Algorithm 1) and Remark 5.1 degeneracies."""
+"""End-to-end convergence of DSBA (Algorithm 1) and Remark 5.1 degeneracies,
+driven through the one registry entrypoint `core.solvers.solve`."""
 import numpy as np
 import pytest
 
-from repro.core import mixing, reference
-from repro.core.dsba import DSBAConfig, run
+from repro.core import mixing
+from repro.core.solvers import Problem, make_problem, solve
 from repro.core.operators import OperatorSpec
 from repro.data.synthetic import make_classification, make_regression
 
@@ -12,21 +13,16 @@ def _setup(task="ridge", n_nodes=6, q=20, d=30, seed=0, positive_ratio=0.3,
            lam=None):
     if task == "ridge":
         data = make_regression(n_nodes, q, d, k=6, seed=seed)
-        spec = OperatorSpec("ridge")
     elif task == "logistic":
         data = make_classification(n_nodes, q, d, k=6, seed=seed)
-        spec = OperatorSpec("logistic")
     else:
         data = make_classification(
             n_nodes, q, d, k=6, positive_ratio=positive_ratio, seed=seed
         )
-        spec = OperatorSpec("auc", p=data.positive_ratio())
-    if lam is None:
-        lam = 1.0 / (10.0 * data.total)  # paper: lambda = 1/(10 Q)
     graph = mixing.erdos_renyi_graph(n_nodes, 0.4, seed=1)
-    w = mixing.laplacian_mixing(graph)
-    z_star = reference.solve_root(spec, data, lam)
-    return data, spec, lam, w, z_star
+    problem = make_problem(task, data, graph, lam=lam)  # lam None -> 1/(10Q)
+    problem.solve_star()
+    return problem
 
 
 # backward (resolvent) steps stay stable at large alpha — a DSBA selling point
@@ -35,18 +31,17 @@ ALPHAS = {"ridge": 0.5, "logistic": 4.0, "auc": 1.0}
 
 @pytest.mark.parametrize("task", ["ridge", "logistic", "auc"])
 def test_dsba_converges_to_centralized_root(task):
-    data, spec, lam, w, z_star = _setup(task)
-    cfg = DSBAConfig(spec=spec, alpha=ALPHAS[task], lam=lam)
-    res = run(cfg, data, w, steps=4000, z_star=z_star, record_every=200)
+    problem = _setup(task)
+    res = solve(problem, "dsba", steps=4000, record_every=200,
+                alpha=ALPHAS[task])
     assert res.dist2[-1] < 1e-12, f"{task}: dist2={res.dist2[-1]:.3e}"
     assert res.consensus[-1] < 1e-12
 
 
 def test_dsba_linear_convergence_rate():
     """dist^2 should decay geometrically: check log-linear slope."""
-    data, spec, lam, w, z_star = _setup("ridge")
-    cfg = DSBAConfig(spec=spec, alpha=0.5, lam=lam)
-    res = run(cfg, data, w, steps=3000, z_star=z_star, record_every=100)
+    problem = _setup("ridge")
+    res = solve(problem, "dsba", steps=3000, record_every=100, alpha=0.5)
     logs = np.log10(np.maximum(res.dist2, 1e-300))
     # strictly decreasing after warmup and large total drop
     assert logs[-1] < logs[2] - 6.0
@@ -57,13 +52,10 @@ def test_dsba_linear_convergence_rate():
 def test_dsa_recovered_and_converges():
     """Remark 5.1: forward-delta variant is DSA; both converge to the same
     root, DSBA at least as fast at its (larger stable) step size."""
-    data, spec, lam, w, z_star = _setup("ridge")
+    problem = _setup("ridge")
     steps = 6000
-    res_b = run(DSBAConfig(spec, alpha=0.5, lam=lam), data, w, steps, z_star=z_star)
-    res_a = run(
-        DSBAConfig(spec, alpha=0.2, lam=lam, method="dsa"),
-        data, w, steps, z_star=z_star,
-    )
+    res_b = solve(problem, "dsba", steps=steps, alpha=0.5)
+    res_a = solve(problem, "dsa", steps=steps, alpha=0.2)
     assert res_b.dist2[-1] < 1e-16
     assert res_a.dist2[-1] < 1e-10  # DSA converges too (smaller stable alpha)
     assert res_b.dist2[-1] <= res_a.dist2[-1]
@@ -73,12 +65,12 @@ def test_single_node_dsba_is_point_saga():
     """N=1: no mixing; DSBA == Point-SAGA (Defazio 2016) — converges to the
     local regularized root."""
     data = make_regression(n_nodes=1, q=40, d=20, k=5, seed=3)
-    spec = OperatorSpec("ridge")
-    lam = 1e-3
-    z_star = reference.solve_root(spec, data, lam)
-    w = np.ones((1, 1))
-    cfg = DSBAConfig(spec, alpha=1.0, lam=lam)
-    res = run(cfg, data, w, steps=3000, z_star=z_star, record_every=100)
+    problem = Problem(
+        spec=OperatorSpec("ridge"), data=data, graph=mixing.Graph(1, ()),
+        w=np.ones((1, 1)), lam=1e-3,
+    )
+    problem.solve_star()
+    res = solve(problem, "dsba", steps=3000, record_every=100, alpha=1.0)
     assert res.dist2[-1] < 1e-14
 
 
@@ -86,10 +78,10 @@ def test_dsba_iterates_satisfy_resolvent_identity():
     """Internal consistency: every update solves
     (1+alpha*lam) z_new + alpha B_{n,i}(z_new) = psi, so the table coeff at
     the sampled index must equal g(x^T z_new)."""
-    data, spec, lam, w, z_star = _setup("ridge", n_nodes=3, q=5, d=10)
-    cfg = DSBAConfig(spec, alpha=0.5, lam=lam)
-    res = run(cfg, data, w, steps=50, record_every=50)
+    problem = _setup("ridge", n_nodes=3, q=5, d=10)
+    res = solve(problem, "dsba", steps=50, record_every=50, alpha=0.5)
     st = res.state
+    data = problem.data
     # recompute coeffs at current z for every (n, i): table rows touched most
     # recently must match exactly
     z = np.asarray(st.z)
@@ -109,29 +101,21 @@ def test_dsba_iterates_satisfy_resolvent_identity():
 def test_extra_dlm_ssda_converge():
     # well-conditioned setup (lam=0.05): these tests verify implementation
     # correctness; the paper-regime comparison lives in benchmarks/.
-    from repro.core.baselines import run_dlm, run_extra, run_ssda
+    problem = _setup("ridge", n_nodes=5, q=20, d=12, lam=0.05)
 
-    data, spec, lam, w, z_star = _setup("ridge", n_nodes=5, q=20, d=12, lam=0.05)
-    graph = mixing.erdos_renyi_graph(5, 0.4, seed=1)
-
-    res_e = run_extra(spec, data, w, alpha=0.3, lam=lam, steps=2000,
-                      z_star=z_star, record_every=100)
+    res_e = solve(problem, "extra", steps=2000, record_every=100, alpha=0.3)
     assert res_e.dist2[-1] < 1e-10, f"EXTRA {res_e.dist2[-1]:.2e}"
 
-    res_d = run_dlm(spec, data, graph, c=0.3, beta=1.0, lam=lam, steps=4000,
-                    z_star=z_star, record_every=200)
+    res_d = solve(problem, "dlm", steps=4000, record_every=200, c=0.3, beta=1.0)
     assert res_d.dist2[-1] < 1e-8, f"DLM {res_d.dist2[-1]:.2e}"
 
-    res_s = run_ssda(spec, data, w, eta=0.03, momentum=0.5, lam=lam, steps=2000,
-                     z_star=z_star, record_every=200)
+    res_s = solve(problem, "ssda", steps=2000, record_every=200,
+                  eta=0.03, momentum=0.5)
     assert res_s.dist2[-1] < 1e-10, f"SSDA {res_s.dist2[-1]:.2e}"
 
 
 def test_ssda_logistic_inner_newton():
-    from repro.core.baselines import run_ssda
-
-    data, spec, lam, w, z_star = _setup("logistic", n_nodes=4, q=16, d=8,
-                                        lam=0.1)
-    res = run_ssda(spec, data, w, eta=0.05, momentum=0.5, lam=lam, steps=1500,
-                   z_star=z_star, record_every=300)
+    problem = _setup("logistic", n_nodes=4, q=16, d=8, lam=0.1)
+    res = solve(problem, "ssda", steps=1500, record_every=300,
+                eta=0.05, momentum=0.5)
     assert res.dist2[-1] < 1e-10, f"SSDA-logistic {res.dist2[-1]:.2e}"

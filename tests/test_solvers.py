@@ -1,0 +1,220 @@
+"""The solver registry: one `solve()` entrypoint, shims pinned trace-identical.
+
+Two claims:
+
+1. Registry semantics — five methods x {dense, sparse-where-supported}
+   dispatch through `core.solvers.solve`, unknown methods / comm backends /
+   hyperparameters fail loudly, and the SolveResult schema is uniform.
+2. Shim parity — the deprecated wrappers (`core.dsba.run`,
+   `core.baselines.run_*`) reproduce `solve(method=..., comm="dense")`
+   exactly: bit-equal snapshot traces for dsba/dsa, <=1e-12 across
+   ridge/logistic/auc on ring + Erdős–Rényi graphs for the baselines.
+"""
+import numpy as np
+import pytest
+
+from repro.core import mixing, reference
+from repro.core.baselines import run_dlm, run_extra, run_ssda
+from repro.core.dsba import DSBAConfig, draw_indices
+from repro.core.dsba import run as legacy_run
+from repro.core.operators import OperatorSpec
+from repro.core.solvers import (
+    Problem,
+    available_solvers,
+    get_solver,
+    graph_from_mixing,
+    make_problem,
+    register_solver,
+    solve,
+)
+from repro.data.synthetic import make_classification, make_regression
+
+STEPS = 24
+REC = 8
+GRAPHS = ["ring", "erdos_renyi"]
+TASKS = ["ridge", "logistic", "auc"]
+
+
+def _problem(task, gname="erdos_renyi", n_nodes=5, q=6, d=16, k=4, lam=1e-2,
+             seed=0):
+    if task == "ridge":
+        data = make_regression(n_nodes, q, d, k=k, seed=seed)
+    elif task == "logistic":
+        data = make_classification(n_nodes, q, d, k=k, seed=seed)
+    else:
+        data = make_classification(n_nodes, q, d, k=k, positive_ratio=0.3,
+                                   seed=seed)
+    if gname == "ring":
+        graph = mixing.ring_graph(n_nodes)
+    else:
+        graph = mixing.erdos_renyi_graph(n_nodes, 0.4, seed=1)
+    return make_problem(task, data, graph, lam=lam)
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_five_methods():
+    avail = available_solvers()
+    assert set(avail) == {"dsba", "dsa", "extra", "dlm", "ssda"}
+    # sparse comm: the stochastic family only (the paper's relay broadcasts
+    # per-sample deltas; the deterministic baselines are dense by nature)
+    assert avail == {"dsba": True, "dsa": True, "extra": False,
+                     "dlm": False, "ssda": False}
+
+
+def test_unknown_method_comm_and_hyperparams_fail_loudly():
+    problem = _problem("ridge")
+    with pytest.raises(KeyError, match="unknown method"):
+        solve(problem, "sgd", steps=2)
+    with pytest.raises(ValueError, match="comm backend"):
+        solve(problem, "dsba", comm="pigeon", steps=2)
+    with pytest.raises(TypeError, match="unknown hyperparameters"):
+        solve(problem, "dsba", steps=2, learning_rate=0.1)
+    with pytest.raises(ValueError, match="comm_options"):
+        solve(problem, "dsba", comm="dense", steps=2,
+              comm_options={"verify": True})
+
+
+def test_register_rejects_duplicate_names():
+    with pytest.raises(ValueError, match="already registered"):
+        register_solver(get_solver("dsba"))
+
+
+def test_problem_defaults_and_z_star_cache():
+    problem = _problem("ridge")
+    # default mixing is the paper's Laplacian weights on the graph
+    np.testing.assert_allclose(
+        problem.w, mixing.laplacian_mixing(problem.graph), atol=1e-15
+    )
+    z1 = problem.solve_star()
+    assert problem.solve_star() is z1  # cached, not recomputed
+    np.testing.assert_allclose(
+        z1, reference.solve_root(problem.spec, problem.data, problem.lam),
+        atol=1e-12,
+    )
+
+
+def test_graph_from_mixing_roundtrip():
+    graph = mixing.erdos_renyi_graph(7, 0.4, seed=3)
+    w = mixing.laplacian_mixing(graph)
+    assert sorted(graph_from_mixing(w).edges) == sorted(graph.edges)
+    wm = mixing.metropolis_mixing(graph)
+    assert sorted(graph_from_mixing(wm).edges) == sorted(graph.edges)
+
+
+def test_mismatched_problem_shapes_rejected():
+    data = make_regression(5, 6, 16, k=4, seed=0)
+    graph = mixing.ring_graph(4)
+    with pytest.raises(ValueError, match="nodes"):
+        Problem(spec=OperatorSpec("ridge"), data=data, graph=graph)
+
+
+def test_record_points_cover_ragged_tail():
+    problem = _problem("ridge")
+    res = solve(problem, "dsba", steps=25, record_every=10, alpha=0.3)
+    assert list(res.iters) == [10, 20, 25]
+    assert res.consensus.shape == (3,)
+    assert res.doubles_received.shape == (3, 5)
+
+
+def test_short_or_misshaped_indices_rejected():
+    """A too-short index stream must fail loudly on BOTH comm backends (the
+    dense scan would otherwise run empty chunks and silently report metrics
+    and communication cost for iterations that never happened)."""
+    problem = _problem("ridge")
+    short = draw_indices(10, 5, 6, seed=0)
+    with pytest.raises(ValueError, match="indices"):
+        solve(problem, "dsba", steps=40, indices=short)
+    with pytest.raises(ValueError, match="indices"):
+        solve(problem, "dsba", comm="sparse", steps=40, indices=short)
+    wrong_n = draw_indices(40, 4, 6, seed=0)
+    with pytest.raises(ValueError, match="indices"):
+        solve(problem, "extra", steps=40, indices=wrong_n)
+
+
+def test_solve_replays_identically_from_seed_and_indices():
+    problem = _problem("ridge")
+    a = solve(problem, "dsba", steps=STEPS, record_every=REC, seed=11,
+              alpha=0.3)
+    b = solve(problem, "dsba", steps=STEPS, record_every=REC, seed=11,
+              alpha=0.3)
+    c = solve(problem, "dsba", steps=STEPS, record_every=REC, seed=12,
+              alpha=0.3)
+    assert np.array_equal(a.z, b.z)
+    assert not np.array_equal(a.z, c.z)
+
+
+# ---------------------------------------------------------------------------
+# shim parity: dsba/dsa bit-equal, baselines <= 1e-12
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gname", GRAPHS)
+@pytest.mark.parametrize("task", TASKS)
+def test_dsba_dsa_shims_bit_identical(task, gname):
+    problem = _problem(task, gname)
+    n, q = problem.data.n_nodes, problem.data.q
+    indices = draw_indices(STEPS, n, q, seed=5)
+    for method in ("dsba", "dsa"):
+        cfg = DSBAConfig(problem.spec, 0.3, problem.lam, method=method)
+        with pytest.warns(DeprecationWarning):
+            legacy = legacy_run(
+                cfg, problem.data, problem.w, STEPS, record_every=REC,
+                indices=indices, keep_snapshots=True,
+            )
+        new = solve(problem, method, steps=STEPS, record_every=REC,
+                    indices=indices, keep_snapshots=True, alpha=0.3)
+        assert np.array_equal(legacy.zs, new.zs), (task, gname, method)
+        assert np.array_equal(np.asarray(legacy.state.z), new.z)
+        assert (legacy.iters == new.iters).all()
+
+
+@pytest.mark.parametrize("gname", GRAPHS)
+@pytest.mark.parametrize("task", TASKS)
+def test_baseline_shims_trace_match(task, gname):
+    problem = _problem(task, gname)
+    z_star = problem.solve_star()
+    data, w, lam = problem.data, problem.w, problem.lam
+
+    with pytest.warns(DeprecationWarning):
+        legacy = run_extra(problem.spec, data, w, alpha=0.2, lam=lam,
+                           steps=STEPS, z_star=z_star, record_every=REC)
+    new = solve(problem, "extra", steps=STEPS, record_every=REC, alpha=0.2)
+    np.testing.assert_allclose(
+        np.asarray(legacy.state[0]), new.z, rtol=0, atol=1e-12
+    )
+    np.testing.assert_allclose(legacy.dist2, new.dist2, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(legacy.consensus, new.consensus, rtol=0,
+                               atol=1e-12)
+
+    with pytest.warns(DeprecationWarning):
+        legacy = run_dlm(problem.spec, data, problem.graph, c=0.3, beta=1.0,
+                         lam=lam, steps=STEPS, z_star=z_star,
+                         record_every=REC)
+    new = solve(problem, "dlm", steps=STEPS, record_every=REC, c=0.3,
+                beta=1.0)
+    np.testing.assert_allclose(
+        np.asarray(legacy.state[0]), new.z, rtol=0, atol=1e-12
+    )
+    np.testing.assert_allclose(legacy.dist2, new.dist2, rtol=0, atol=1e-12)
+
+    if task != "auc":  # the paper: SSDA does not apply to the AUC saddle
+        with pytest.warns(DeprecationWarning):
+            legacy = run_ssda(problem.spec, data, w, eta=0.05, momentum=0.5,
+                              lam=lam, steps=STEPS, z_star=z_star,
+                              record_every=REC)
+        new = solve(problem, "ssda", steps=STEPS, record_every=REC,
+                    eta=0.05, momentum=0.5)
+        np.testing.assert_allclose(legacy.dist2, new.dist2, rtol=0,
+                                   atol=1e-12)
+        np.testing.assert_allclose(legacy.consensus, new.consensus, rtol=0,
+                                   atol=1e-12)
+
+
+def test_ssda_rejects_auc_tail():
+    problem = _problem("auc")
+    with pytest.raises(NotImplementedError, match="SSDA"):
+        solve(problem, "ssda", steps=2)

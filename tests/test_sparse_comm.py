@@ -1,21 +1,22 @@
 """DSBA-s (Section 5.1): protocol == dense algorithm, costs == O(N rho d).
 
-The fast (default) tests share one compiled configuration via a module
-fixture: a ridge/DSBA run on the paper's Erdős–Rényi topology, executed by
-the dense runtime, the vectorized relay engine (verify=True, Pallas-routed
-delta path), and the legacy reference loop. The `slow`-marked sweeps extend
-the same claims to every task x method x graph combination; run them with
-`pytest -m ""`.
+All runs go through `core.solvers.solve` — the sparse relay is just the
+`comm="sparse"` backend of the registry (backend options pass through
+`comm_options`). The fast (default) tests share one compiled configuration
+via a module fixture: a ridge/DSBA run on the paper's Erdős–Rényi topology,
+executed by the dense backend, the vectorized relay engine (verify=True,
+Pallas-routed delta path), and the legacy reference loop. The `slow`-marked
+sweeps extend the same claims to every task x method x graph combination;
+run them with `pytest -m ""`.
 """
 import numpy as np
 import pytest
 
 from repro.core import mixing
-from repro.core.dsba import DSBAConfig, draw_indices, run
-from repro.core.operators import OperatorSpec
+from repro.core.dsba import draw_indices
+from repro.core.solvers import make_problem, solve
 from repro.core.sparse_comm import (
     dense_doubles_per_iter,
-    run_sparse,
     sparse_doubles_per_iter,
 )
 from repro.data.synthetic import make_classification, make_regression
@@ -23,19 +24,16 @@ from repro.data.synthetic import make_classification, make_regression
 STEPS = 40
 
 
-def _setup(task, n_nodes=6, q=8, d=24, k=4, seed=0):
+def _setup(task, n_nodes=6, q=8, d=24, k=4, seed=0, lam=None):
     if task == "ridge":
         data = make_regression(n_nodes, q, d, k=k, seed=seed)
-        spec = OperatorSpec("ridge")
     elif task == "logistic":
         data = make_classification(n_nodes, q, d, k=k, seed=seed)
-        spec = OperatorSpec("logistic")
     else:
-        data = make_classification(n_nodes, q, d, k=k, positive_ratio=0.3, seed=seed)
-        spec = OperatorSpec("auc", p=data.positive_ratio())
+        data = make_classification(n_nodes, q, d, k=k, positive_ratio=0.3,
+                                   seed=seed)
     graph = mixing.erdos_renyi_graph(n_nodes, 0.4, seed=2)
-    w = mixing.laplacian_mixing(graph)
-    return data, spec, graph, w
+    return make_problem(task, data, graph, lam=lam)
 
 
 def _graph(name, n):
@@ -47,37 +45,56 @@ def _graph(name, n):
 @pytest.fixture(scope="module")
 def shared():
     """Dense + vectorized + reference runs of one shared configuration."""
-    data, spec, graph, w = _setup("ridge")
-    cfg = DSBAConfig(spec, alpha=0.3, lam=1.0 / (10 * data.total))
-    indices = draw_indices(STEPS, data.n_nodes, data.q, seed=7)
-    dense = run(cfg, data, w, STEPS, record_every=STEPS, indices=indices)
-    vec = run_sparse(cfg, data, graph, w, STEPS, indices, verify=True)
-    ref = run_sparse(cfg, data, graph, w, STEPS, indices, engine="reference")
-    return data, graph, dense, vec, ref
+    problem = _setup("ridge")
+    indices = draw_indices(STEPS, problem.data.n_nodes, problem.data.q, seed=7)
+    kw = dict(steps=STEPS, record_every=1, indices=indices, alpha=0.3)
+    dense = solve(problem, "dsba", comm="dense", **kw)
+    vec = solve(problem, "dsba", comm="sparse",
+                comm_options={"verify": True}, **kw)
+    ref = solve(problem, "dsba", comm="sparse",
+                comm_options={"engine": "reference"}, **kw)
+    return problem, dense, vec, ref
 
 
 def test_sparse_comm_trajectory_equals_dense(shared):
     """The relay protocol must reproduce the dense trajectory exactly."""
-    _, _, dense, vec, _ = shared
-    np.testing.assert_allclose(
-        vec.z_trace[-1], np.asarray(dense.state.z), rtol=0, atol=1e-12
-    )
-    assert vec.recon_max_err < 1e-9, vec.recon_max_err
+    _, dense, vec, _ = shared
+    np.testing.assert_allclose(vec.z, dense.z, rtol=0, atol=1e-12)
+    assert vec.extras["recon_max_err"] < 1e-9, vec.extras["recon_max_err"]
 
 
 def test_vectorized_engine_matches_reference(shared):
     """Ring-buffer engine == legacy loop: trajectory, costs, recon error."""
-    _, _, _, vec, ref = shared
-    np.testing.assert_allclose(vec.z_trace, ref.z_trace, rtol=0, atol=1e-12)
+    _, _, vec, ref = shared
+    np.testing.assert_allclose(
+        vec.extras["z_trace"], ref.extras["z_trace"], rtol=0, atol=1e-12
+    )
     assert (vec.doubles_received == ref.doubles_received).all()
     assert (vec.ints_received == ref.ints_received).all()
-    assert ref.recon_max_err < 1e-9
-    assert vec.recon_max_err < 1e-9
+    assert ref.extras["recon_max_err"] < 1e-9
+    assert vec.extras["recon_max_err"] < 1e-9
+
+
+def test_solve_result_schema_uniform_across_backends(shared):
+    """One schema: both backends fill iters/metrics/comm the same way."""
+    _, dense, vec, _ = shared
+    assert (dense.iters == vec.iters).all()
+    n = dense.doubles_received.shape[1]
+    assert vec.doubles_received.shape == dense.doubles_received.shape
+    assert (dense.ints_received == 0).all()  # dense blocks carry no indices
+    # dense accounting is the closed-form deg*D model at every record point
+    problem = shared[0]
+    per_node = dense_doubles_per_iter(problem.graph, problem.dim)
+    assert (dense.doubles_received
+            == dense.iters[:, None] * per_node[None, :]).all()
+    assert dense.wall_time > 0 and vec.wall_time > 0
+    assert dense.z.shape == vec.z.shape == (n, shared[0].dim)
 
 
 def test_sparse_comm_cost_is_o_n_rho_d(shared):
     """Steady-state per-iteration DOUBLEs: (N-1)*k  vs  dense deg*d."""
-    data, graph, _, vec, _ = shared
+    problem, _, vec, _ = shared
+    data, graph = problem.data, problem.graph
     per_iter = np.diff(vec.doubles_received, axis=0)[-10:]  # steady state
     expect = sparse_doubles_per_iter(data.n_nodes, data.k, 0)
     assert (per_iter == expect).all(), (per_iter, expect)
@@ -90,7 +107,8 @@ def test_sparse_comm_cost_is_o_n_rho_d(shared):
 
 
 def test_sparse_comm_warmup_cost_is_one_time(shared):
-    data, graph, _, vec, _ = shared
+    problem, _, vec, _ = shared
+    data, graph = problem.data, problem.graph
     E = graph.diameter
     total_warmup = vec.doubles_received[E + 1].max()
     # warm-up includes the one-time dense z^1 flood: (N-1)*D doubles
@@ -100,14 +118,19 @@ def test_sparse_comm_warmup_cost_is_one_time(shared):
     assert (growth == sparse_doubles_per_iter(data.n_nodes, data.k, 0)).all()
 
 
+def test_sparse_comm_requires_a_sparse_backend(shared):
+    """comm="sparse" on a dense-only method is a clear error, not a fallback."""
+    problem = shared[0]
+    with pytest.raises(ValueError, match="sparse-communication backend"):
+        solve(problem, "extra", comm="sparse", steps=4)
+
+
 def test_verify_mode_catches_protocol_violations(shared, monkeypatch):
     """A corrupted relay schedule must trip the availability guard."""
     import repro.core.sparse_comm as sc
 
-    data, graph, _, _, _ = shared
-    w = mixing.laplacian_mixing(graph)
-    cfg = DSBAConfig(OperatorSpec("ridge"), alpha=0.3, lam=1e-3)
-    indices = draw_indices(8, data.n_nodes, data.q, seed=7)
+    problem = _setup("ridge", lam=1e-3)
+    indices = draw_indices(8, problem.data.n_nodes, problem.data.q, seed=7)
 
     real_tables = sc._protocol_tables
 
@@ -121,24 +144,21 @@ def test_verify_mode_catches_protocol_violations(shared, monkeypatch):
 
     monkeypatch.setattr(sc, "_protocol_tables", shallow_tables)
     with pytest.raises(sc.ProtocolViolation):
-        sc.run_sparse(
-            cfg, data, graph, w, 8, indices, verify=True, use_pallas="off"
-        )
+        solve(problem, "dsba", comm="sparse", steps=8, indices=indices,
+              alpha=0.3, comm_options={"verify": True, "use_pallas": "off"})
 
 
 def test_fast_path_reports_nan_recon_err(shared):
     """Without verify= the engine skips truth checking (allocation-lean)."""
-    data, graph, _, _, _ = shared
-    spec = OperatorSpec("ridge")
-    cfg = DSBAConfig(spec, alpha=0.3, lam=1.0 / (10 * data.total))
-    w = mixing.laplacian_mixing(graph)
-    indices = draw_indices(4, data.n_nodes, data.q, seed=7)
-    res = run_sparse(cfg, data, graph, w, 4, indices, use_pallas="off")
-    assert np.isnan(res.recon_max_err)
+    problem = _setup("ridge")
+    indices = draw_indices(4, problem.data.n_nodes, problem.data.q, seed=7)
+    res = solve(problem, "dsba", comm="sparse", steps=4, indices=indices,
+                alpha=0.3, comm_options={"use_pallas": "off"})
+    assert np.isnan(res.extras["recon_max_err"])
 
 
 # ---------------------------------------------------------------------------
-# Exhaustive sweeps (slow): every task x method against the dense runtime,
+# Exhaustive sweeps (slow): every task x method against the dense backend,
 # and engine parity on ring + Erdős–Rényi graphs for all three tasks.
 # ---------------------------------------------------------------------------
 
@@ -147,20 +167,17 @@ def test_fast_path_reports_nan_recon_err(shared):
 @pytest.mark.parametrize("task", ["ridge", "logistic", "auc"])
 @pytest.mark.parametrize("method", ["dsba", "dsa"])
 def test_sparse_comm_trajectory_equals_dense_matrix(task, method):
-    data, spec, graph, w = _setup(task)
+    problem = _setup(task)
     steps = 60
-    lam = 1.0 / (10 * data.total)
-    cfg = DSBAConfig(spec, alpha=0.3, lam=lam, method=method)
-    indices = draw_indices(steps, data.n_nodes, data.q, seed=7)
+    indices = draw_indices(steps, problem.data.n_nodes, problem.data.q, seed=7)
+    kw = dict(steps=steps, record_every=steps, indices=indices, alpha=0.3)
+    dense = solve(problem, method, comm="dense", keep_snapshots=True, **kw)
+    sparse = solve(problem, method, comm="sparse",
+                   comm_options={"verify": True}, **kw)
 
-    dense = run(cfg, data, w, steps, record_every=steps, indices=indices,
-                keep_snapshots=True)
-    sparse = run_sparse(cfg, data, graph, w, steps, indices, verify=True)
-
-    np.testing.assert_allclose(
-        sparse.z_trace[-1], np.asarray(dense.state.z), rtol=0, atol=1e-12
-    )
-    assert sparse.recon_max_err < 1e-9, sparse.recon_max_err
+    np.testing.assert_allclose(sparse.z, dense.z, rtol=0, atol=1e-12)
+    err = sparse.extras["recon_max_err"]
+    assert err < 1e-9, err
 
 
 @pytest.mark.slow
@@ -169,48 +186,51 @@ def test_sparse_comm_trajectory_equals_dense_matrix(task, method):
 @pytest.mark.parametrize("method", ["dsba", "dsa"])
 def test_vectorized_matches_reference_matrix(gname, task, method):
     """Parity on multi-hop topologies: z_trace, doubles, ints, recon err."""
-    data, spec, _, _ = _setup(task, n_nodes=7)
+    base = _setup(task, n_nodes=7, lam=1e-3)
     graph = _graph(gname, 7)
-    w = mixing.laplacian_mixing(graph)
+    problem = make_problem(task, base.data, graph, lam=1e-3)
     steps = 40
-    cfg = DSBAConfig(spec, alpha=0.3, lam=1e-3, method=method)
-    indices = draw_indices(steps, 7, data.q, seed=3)
-    ref = run_sparse(cfg, data, graph, w, steps, indices, engine="reference")
-    vec = run_sparse(cfg, data, graph, w, steps, indices, verify=True)
-    np.testing.assert_allclose(vec.z_trace, ref.z_trace, rtol=0, atol=1e-12)
+    indices = draw_indices(steps, 7, problem.data.q, seed=3)
+    kw = dict(steps=steps, record_every=1, indices=indices, alpha=0.3)
+    ref = solve(problem, method, comm="sparse",
+                comm_options={"engine": "reference"}, **kw)
+    vec = solve(problem, method, comm="sparse",
+                comm_options={"verify": True}, **kw)
+    np.testing.assert_allclose(
+        vec.extras["z_trace"], ref.extras["z_trace"], rtol=0, atol=1e-12
+    )
     assert (vec.doubles_received == ref.doubles_received).all()
     assert (vec.ints_received == ref.ints_received).all()
-    assert vec.recon_max_err < 1e-9
-    assert ref.recon_max_err < 1e-9
+    assert vec.extras["recon_max_err"] < 1e-9
+    assert ref.extras["recon_max_err"] < 1e-9
 
 
 @pytest.mark.slow
 def test_sparse_comm_reconstruction_on_larger_diameter_graph():
     """Ring graph (diameter 3): deltas arrive with multi-hop delays."""
-    data, spec, _, _ = _setup("ridge", n_nodes=7)
+    base = _setup("ridge", n_nodes=7)
     graph = mixing.ring_graph(7)
-    w = mixing.laplacian_mixing(graph)
+    problem = make_problem("ridge", base.data, graph, lam=1e-3)
     steps = 40
-    cfg = DSBAConfig(spec, alpha=0.3, lam=1e-3)
-    indices = draw_indices(steps, 7, data.q, seed=3)
-    dense = run(cfg, data, w, steps, record_every=steps, indices=indices)
-    sparse = run_sparse(cfg, data, graph, w, steps, indices, verify=True)
-    np.testing.assert_allclose(
-        sparse.z_trace[-1], np.asarray(dense.state.z), atol=1e-12
-    )
-    assert sparse.recon_max_err < 1e-9
+    indices = draw_indices(steps, 7, problem.data.q, seed=3)
+    kw = dict(steps=steps, record_every=steps, indices=indices, alpha=0.3)
+    dense = solve(problem, "dsba", comm="dense", **kw)
+    sparse = solve(problem, "dsba", comm="sparse",
+                   comm_options={"verify": True}, **kw)
+    np.testing.assert_allclose(sparse.z, dense.z, atol=1e-12)
+    assert sparse.extras["recon_max_err"] < 1e-9
 
 
 @pytest.mark.slow
 def test_sparse_comm_cost_at_paper_dimension():
     """Seed-strength cost check: measured accounting at d=600."""
-    data, spec, graph, w = _setup("ridge", n_nodes=6, d=600, k=5)
+    problem = _setup("ridge", n_nodes=6, d=600, k=5, lam=1e-3)
     steps = 30
-    cfg = DSBAConfig(spec, alpha=0.3, lam=1e-3)
-    indices = draw_indices(steps, 6, data.q, seed=3)
-    res = run_sparse(cfg, data, graph, w, steps, indices)
+    indices = draw_indices(steps, 6, problem.data.q, seed=3)
+    res = solve(problem, "dsba", comm="sparse", steps=steps, record_every=1,
+                indices=indices, alpha=0.3)
     per_iter = np.diff(res.doubles_received, axis=0)[-10:]
-    expect = sparse_doubles_per_iter(6, data.k, spec.tail_dim)
+    expect = sparse_doubles_per_iter(6, problem.data.k, problem.spec.tail_dim)
     assert (per_iter == expect).all(), (per_iter, expect)
-    dense_cost = dense_doubles_per_iter(graph, data.d)
+    dense_cost = dense_doubles_per_iter(problem.graph, problem.data.d)
     assert per_iter.max() * 10 < dense_cost.min()

@@ -1,16 +1,17 @@
 """End-to-end behaviour: the paper's full pipeline, assembled.
 
-Decentralized ridge on a sparse dataset -> DSBA with sparse communication
-protocol -> convergence to the centralized optimum, with communication cost
-matching the closed-form O(N rho d) model — the paper's two claims, one test.
+Decentralized ridge on a sparse dataset -> one `solve()` call per claim:
+DSBA dense for linear convergence to the centralized optimum, DSBA sparse
+for trajectory-exact relay communication at the closed-form O(N rho d)
+cost — the paper's two claims, one test, one API.
 """
 import numpy as np
 
-from repro.core import mixing, reference
-from repro.core.dsba import DSBAConfig, draw_indices, run
-from repro.core.operators import OperatorSpec
+from repro.core import mixing
+from repro.core.dsba import draw_indices
+from repro.core.solvers import make_problem, solve
 from repro.core.sparse_comm import (
-    dense_doubles_per_iter, run_sparse, sparse_doubles_per_iter,
+    dense_doubles_per_iter, sparse_doubles_per_iter,
 )
 from repro.data.synthetic import make_regression
 
@@ -19,28 +20,28 @@ def test_end_to_end_paper_pipeline():
     n, q, d, k = 8, 20, 400, 10
     data = make_regression(n, q, d, k=k, seed=0)
     graph = mixing.erdos_renyi_graph(n, 0.4, seed=1)
-    w = mixing.laplacian_mixing(graph)
-    mixing.validate_mixing(w, graph)
-    spec = OperatorSpec("ridge")
-    lam = 1.0 / (10 * data.total)
-    z_star = reference.solve_root(spec, data, lam)
+    problem = make_problem("ridge", data, graph)  # lam = 1/(10 Q)
+    mixing.validate_mixing(problem.w, graph)
+    problem.solve_star()
 
     # claim 1: linear convergence to the centralized root
-    cfg = DSBAConfig(spec, alpha=2.0, lam=lam)
-    res = run(cfg, data, w, steps=6000, z_star=z_star, record_every=1000)
+    res = solve(problem, "dsba", steps=6000, record_every=1000, alpha=2.0)
     assert res.dist2[-1] < 1e-8, res.dist2
     drops = np.diff(np.log10(np.maximum(res.dist2, 1e-300)))
     assert drops.mean() < -0.3  # geometric decay
 
     # claim 2: sparse communication reproduces the dense trajectory at
-    # O(N rho d) cost
+    # O(N rho d) cost — same schema, same entrypoint, comm= flipped
     steps = 40
     idx = draw_indices(steps, n, q, seed=2)
-    dense = run(cfg, data, w, steps, record_every=steps, indices=idx)
-    sparse = run_sparse(cfg, data, graph, w, steps, idx)
-    np.testing.assert_allclose(
-        sparse.z_trace[-1], np.asarray(dense.state.z), atol=1e-12
-    )
+    dense = solve(problem, "dsba", steps=steps, record_every=1,
+                  indices=idx, alpha=2.0)
+    sparse = solve(problem, "dsba", comm="sparse", steps=steps,
+                   record_every=1, indices=idx, alpha=2.0)
+    np.testing.assert_allclose(sparse.z, dense.z, atol=1e-12)
     per_iter = np.diff(sparse.doubles_received, axis=0)[-8:]
     assert (per_iter == sparse_doubles_per_iter(n, k, 0)).all()
     assert per_iter.max() * 5 < dense_doubles_per_iter(graph, d).max()
+    # and the dense side of the same schema reports the deg*d model
+    assert (np.diff(dense.doubles_received, axis=0)
+            == dense_doubles_per_iter(graph, d)[None, :]).all()
