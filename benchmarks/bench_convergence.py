@@ -13,13 +13,14 @@ import pathlib
 
 
 from repro.core import mixing
-from repro.core.solvers import make_problem, solve
+from repro.core.solvers import make_problem, solve, solve_many
 from repro.core.sparse_comm import sparse_doubles_per_iter
 from repro.data.synthetic import make_classification, make_regression
 
 OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
 
-# per-method tuned hyperparameters (grid-searched; the paper also tunes
+# per-method tuned hyperparameters (grid-searched — `tune_stochastic` below
+# replays the search as ONE batched solve_many; the paper also tunes
 # per-method). The problem is deliberately run at the paper's
 # lambda = 1/(10Q), i.e. kappa ~ L/lambda ~ 10^3: DSBA's backward step stays
 # stable at alpha = 4 while the forward/deterministic methods are
@@ -48,6 +49,28 @@ def setup(task: str, n=10, q=100, d=800, k=30, seed=0):
     problem = make_problem(task, data, graph)
     problem.solve_star()
     return problem
+
+
+def tune_stochastic(task: str, method: str = "dsba",
+                    alphas=(0.5, 1.0, 2.0, 4.0, 8.0), passes: int = 30,
+                    problem=None):
+    """Replay the step-size grid search as ONE batched ``solve_many``.
+
+    The whole alpha grid advances in lockstep inside a single vmapped
+    compiled runner — this is how the TUNING table above was produced.
+    Pass ``problem`` to reuse an already-built instance (shares the z*
+    solve and the dataset's runner-cache key across methods); otherwise
+    one is built. Returns {alpha: final dist2}, best alpha first.
+    """
+    if problem is None:
+        problem = setup(task)
+    q = problem.data.q
+    res = solve_many(
+        problem, method, steps=passes * q, record_every=passes * q,
+        grid=[{"alpha": float(a)} for a in alphas],
+    )
+    finals = dict(zip(alphas, res.dist2[:, -1]))
+    return dict(sorted(finals.items(), key=lambda kv: kv[1]))
 
 
 def run_all(task: str, passes: int = 120):
@@ -143,14 +166,33 @@ def render(task: str, passes: int = 120) -> str:
     return "\n".join(lines)
 
 
-def main(passes: int = 120):
-    """Render + write the three per-task experiment tables."""
+def main(passes: int = 120, tune: bool = False):
+    """Render + write the three per-task experiment tables.
+
+    tune=True additionally prints the batched step-size grid search
+    (``tune_stochastic``) for the stochastic methods on each task.
+    """
     OUT.mkdir(exist_ok=True, parents=True)
     for task in ("ridge", "logistic", "auc"):
         md = render(task, passes)
         (OUT / f"convergence_{task}.md").write_text(md)
         print(md)
+        if tune:
+            problem = setup(task)  # shared across methods: one z*, one key
+            for method in ("dsba", "dsa"):
+                finals = tune_stochastic(task, method, problem=problem)
+                line = ", ".join(
+                    f"alpha={a:g}: {v:.2e}" for a, v in finals.items()
+                )
+                print(f"{task}/{method} alpha sweep (solve_many): {line}")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--passes", type=int, default=120)
+    ap.add_argument("--tune", action="store_true",
+                    help="also run the batched alpha grid search")
+    args = ap.parse_args()
+    main(args.passes, tune=args.tune)

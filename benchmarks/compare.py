@@ -27,13 +27,24 @@ def load(path: str) -> dict[str, float]:
 
 def compare(base: dict[str, float], new: dict[str, float],
             max_ratio: float) -> list[str]:
+    """Entry-by-entry report; returns the list of gate failures.
+
+    Only entries present in BOTH payloads are gated. Baseline-missing
+    entries print as ``NEW`` (informational) so a PR introducing a
+    benchmark — e.g. the ``sweep_*`` family — passes before its baseline
+    is committed; entries only in the baseline print as ``REMOVED``.
+    """
     failures = []
+    fresh = removed = 0
     for name in sorted(set(base) | set(new)):
         if name not in base:
-            print(f"NEW      {name}: {new[name]:.1f} us (no baseline)")
+            print(f"NEW      {name}: {new[name]:.1f} us (no baseline; "
+                  "informational — refresh the baseline to gate it)")
+            fresh += 1
             continue
         if name not in new:
             print(f"REMOVED  {name}: baseline {base[name]:.1f} us")
+            removed += 1
             continue
         ratio = new[name] / base[name] if base[name] else float("inf")
         status = "FAIL" if ratio > max_ratio else "ok"
@@ -44,6 +55,8 @@ def compare(base: dict[str, float], new: dict[str, float],
                 f"{name}: {ratio:.2f}x > {max_ratio}x "
                 f"({base[name]:.1f} -> {new[name]:.1f} us)"
             )
+    if fresh or removed:
+        print(f"({fresh} new / {removed} removed entries — never gated)")
     return failures
 
 

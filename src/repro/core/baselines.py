@@ -19,10 +19,9 @@ O(Delta(G) d)) — the two costs DSBA improves on.
 """
 from __future__ import annotations
 
-import warnings
-
 import numpy as np
 
+from repro.core.deprecation import warn_once
 from repro.core.dsba import RunResult
 from repro.core.mixing import Graph
 from repro.core.operators import OperatorSpec
@@ -30,10 +29,12 @@ from repro.core import solvers
 
 
 def _deprecated(name: str, method: str) -> None:
-    warnings.warn(
+    # once per process per shim; stacklevel=3 walks warn_once's caller
+    # (this helper) -> the run_* shim -> the user's call site.
+    warn_once(
+        f"baselines.{name}",
         f"core.baselines.{name} is deprecated; use core.solvers.solve("
         f"problem, method={method!r}, comm='dense') instead",
-        DeprecationWarning,
         stacklevel=3,
     )
 

@@ -234,14 +234,20 @@ def dsba_step(
 
 
 def make_step_fn(cfg: DSBAConfig, data, w: np.ndarray):
-    """Device-resident local-update closure: step(state, i_t, mix=None).
+    """Device-resident local-update closure: step(state, i_t, mix=None, hp=None).
 
     Bakes the dataset and mixing matrices into device arrays ONCE and returns
-    a pure function of (state, i_t, mix) that is safe to call inside jit /
+    a pure function of (state, i_t, mix, hp) that is safe to call inside jit /
     lax.scan. This is the mix-row hook used by core.sparse_comm: the sparse-
     communication engine composes this step with its reconstruction-derived
     mixing rows entirely on device, so per-iteration state never round-trips
     through NumPy.
+
+    hp: optional mapping with ``"alpha"`` / ``"lam"`` overriding the values
+    baked in ``cfg``. The compiled-runner cache (core.runner_cache) passes
+    these as *traced* scalars so one compiled step serves every
+    hyperparameter value on the same problem shape; ``hp=None`` keeps the
+    legacy baked-constant behavior for direct callers.
     """
     dt = data.val.dtype
     w_j = jnp.asarray(w, dt)
@@ -250,8 +256,16 @@ def make_step_fn(cfg: DSBAConfig, data, w: np.ndarray):
     val_j = jnp.asarray(data.val)
     y_j = jnp.asarray(data.y)
 
-    def step(state: DSBAState, i_t: jax.Array, mix: jax.Array | None = None):
-        return dsba_step(cfg, w_j, wt_j, idx_j, val_j, y_j, state, i_t, mix)
+    def step(
+        state: DSBAState,
+        i_t: jax.Array,
+        mix: jax.Array | None = None,
+        hp=None,
+    ):
+        c = cfg
+        if hp is not None:
+            c = dataclasses.replace(cfg, alpha=hp["alpha"], lam=hp["lam"])
+        return dsba_step(c, w_j, wt_j, idx_j, val_j, y_j, state, i_t, mix)
 
     return step
 
@@ -297,14 +311,13 @@ def run(
 
     indices: optional (steps, N) pre-drawn sample indices (replayable runs).
     """
-    import warnings
-
     from repro.core import solvers
+    from repro.core.deprecation import warn_once
 
-    warnings.warn(
+    warn_once(
+        "dsba.run",
         "core.dsba.run is deprecated; use core.solvers.solve("
         f"problem, method={cfg.method!r}) instead",
-        DeprecationWarning,
         stacklevel=2,
     )
     problem = solvers.Problem(

@@ -1,0 +1,153 @@
+"""Keyed caches of compiled solver runners — the sweep-engine backbone.
+
+Every experiment in this repo is sweep-shaped: many ``solve()`` calls over a
+(lam, alpha, method, seed) grid on one problem shape. Before this module
+each call baked fresh step closures and re-traced/re-compiled its jitted
+scan (~1-2 s on CPU), so benchmark wall time was XLA compilation, not the
+solver. Now ``core.solvers`` (dense chunked scan) and ``core.sparse_comm``
+(the relay scan) compile ONE runner per cache key and pass hyperparameter
+*values* as traced arguments, so every later call on the same problem shape
+hits a warm executable.
+
+Keying rules (see docs/solvers.md for the authored contract):
+
+* The *caller* builds the key: method name, comm backend, operator family,
+  data-array shapes/dtypes, graph edges, a mixing-matrix content
+  fingerprint, and the *static* hyperparameter structure. Hyperparameter
+  values never enter the key — they are traced runner arguments.
+* Object-identity components (the dataset) are keyed by ``id()`` with a
+  strong reference held in the entry ("guard"), so a recycled ``id`` can
+  never alias a live key: if the id matches, it *is* the same object.
+  Corollary: datasets are treated as immutable — mutating a dataset's
+  arrays IN PLACE keeps its id and silently replays the runner baked from
+  the pre-edit data (build a new dataset object, or ``clear()``).
+* Entries are LRU-bounded (default 32) so long-lived processes sweeping
+  many distinct problems do not accumulate unbounded device constants.
+
+Stats are per-cache and process-global. ``traces`` is incremented from
+*inside* the traced function (via ``note_trace``) — i.e. it counts actual
+XLA (re)traces, not calls — so tests can assert "second call, new
+hyperparameter values, zero new traces" directly
+(tests/test_runner_cache.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One cached runner: the built value plus its identity guards."""
+
+    guards: tuple
+    value: Any
+
+
+class RunnerCache:
+    """A bounded, stats-tracking LRU mapping of runner keys to built runners."""
+
+    def __init__(self, name: str, capacity: int = 32):
+        """Create an empty cache. ``name`` labels it in aggregated stats."""
+        self.name = name
+        self.capacity = capacity
+        self._entries: OrderedDict[tuple, _Entry] = OrderedDict()
+        self._stats = {"hits": 0, "misses": 0, "traces": 0, "evictions": 0}
+
+    def get_or_build(
+        self, key: tuple, guards: tuple, build: Callable[[], Any]
+    ) -> Any:
+        """Return the cached value for ``key`` or build, insert, and return it.
+
+        ``guards`` are the objects whose ``id()`` participates in ``key``;
+        the entry holds them strongly so the ids stay valid for its
+        lifetime. A hit requires every guard to be the *same object* as at
+        insert time (belt and braces on top of the id keying).
+        """
+        entry = self._entries.get(key)
+        if entry is not None and all(
+            a is b for a, b in zip(entry.guards, guards)
+        ):
+            self._stats["hits"] += 1
+            self._entries.move_to_end(key)
+            return entry.value
+        self._stats["misses"] += 1
+        value = build()
+        self._entries[key] = _Entry(guards=tuple(guards), value=value)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self._stats["evictions"] += 1
+        return value
+
+    def note_trace(self) -> None:
+        """Record one XLA trace. Call from INSIDE the to-be-jitted function:
+        the Python body runs only while tracing, so this counts compiles,
+        not calls."""
+        self._stats["traces"] += 1
+
+    def stats(self) -> dict[str, int]:
+        """Copy of {hits, misses, traces, evictions, size}."""
+        return dict(self._stats, size=len(self._entries))
+
+    def clear(self) -> None:
+        """Drop every entry and zero the stats (tests and benchmarks)."""
+        self._entries.clear()
+        for k in self._stats:
+            self._stats[k] = 0
+
+
+# The two process-global caches: the dense chunked-scan runners of
+# core.solvers.solve / solve_many, and the sparse relay scans of
+# core.sparse_comm. Module-level so stats survive across solve() calls.
+DENSE = RunnerCache("dense")
+SPARSE = RunnerCache("sparse")
+
+
+def problem_fingerprint(data, operator_spec, graph, w) -> tuple:
+    """The shared problem-shape component of a runner key.
+
+    One definition for both caches (the dense runners in ``core.solvers``
+    and the relay scans in ``core.sparse_comm``), so the keying schema
+    cannot drift between them: dataset identity (guard the object!),
+    padded-CSR shapes/dtype, operator family, graph edges, and a mixing-
+    matrix content fingerprint.
+    """
+    return (
+        id(data),
+        (data.n_nodes, data.q, data.k, data.d,
+         str(np.asarray(data.val).dtype)),
+        operator_spec,
+        (graph.n, tuple(graph.edges)),
+        array_fingerprint(w),
+    )
+
+
+def array_fingerprint(a) -> tuple:
+    """Content key for a small array (the mixing matrix): shape, dtype, hash.
+
+    Problems rebuilt per sweep point (bench_table1 makes one per ``lam``)
+    carry *equal* but not *identical* W arrays; fingerprinting by content
+    lets them share one compiled runner.
+    """
+    a = np.ascontiguousarray(a)
+    return (
+        a.shape,
+        str(a.dtype),
+        hashlib.blake2b(a.tobytes(), digest_size=16).hexdigest(),
+    )
+
+
+def stats() -> dict[str, dict[str, int]]:
+    """{cache name: stats} for every runner cache in the process."""
+    return {c.name: c.stats() for c in (DENSE, SPARSE)}
+
+
+def clear() -> None:
+    """Reset both runner caches (cold-start benchmarks, test isolation)."""
+    DENSE.clear()
+    SPARSE.clear()

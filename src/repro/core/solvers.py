@@ -14,7 +14,13 @@ per the deterministic baselines of Table 1) and the *communication backend*
     problem.solve_star()                      # cache the centralized root
     res = solve(problem, method="dsba", comm="sparse", steps=4000)
 
-``solve`` is the only non-deprecated run entrypoint. ``core.dsba.run`` and
+``solve`` is the per-run entrypoint; ``solve_many`` runs a whole
+hyperparameter/seed grid as one vmapped computation. Both are backed by a
+keyed cache of compiled runners (``core.runner_cache``): the jitted chunked
+scan is compiled once per (method, comm, problem shape, static-hp
+structure) with hyperparameter *values* passed as traced arguments, so
+sweep-shaped experiments (bench_table1's lam grid, seed replications) pay
+XLA compilation once. ``core.dsba.run`` and
 ``core.baselines.run_extra/run_dlm/run_ssda`` are thin deprecated shims
 delegating here, pinned trace-identical by ``tests/test_solvers.py``.
 
@@ -35,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import reference
+from repro.core import reference, runner_cache
 from repro.core.dsba import (
     DSBAConfig,
     draw_indices,
@@ -44,6 +50,10 @@ from repro.core.dsba import (
 )
 from repro.core.mixing import Graph, laplacian_mixing, w_tilde
 from repro.core.operators import OperatorSpec
+from repro.core.runner_cache import (
+    clear as clear_runner_caches,  # noqa: F401  (public re-export)
+    stats as runner_cache_stats,  # noqa: F401  (public re-export)
+)
 from repro.core import sparse_comm as _sparse_comm
 from repro.core.sparse_comm import dense_doubles_per_iter
 
@@ -156,18 +166,30 @@ class SolverSpec:
     """One solver's contract with ``solve()`` (see docs/solvers.md).
 
     ``init``/``step``/``z_of`` are *factories* over ``(problem, hp)`` so each
-    entry can bake data, mixing matrices and hyperparameters into device
-    arrays exactly once per run:
+    entry can bake data and mixing matrices into device arrays exactly once
+    per compiled runner. Hyperparameter VALUES are not baked: the functions
+    a factory returns receive the runtime hyperparameters as a final ``hp``
+    argument — a dict of scalars that the compiled-runner cache passes as
+    *traced* jit arguments, so a sweep over values reuses one executable:
 
     - ``init(problem, hp, z0) -> state``: initial state pytree from a (N, D)
       starting point (scan-compatible: every leaf is a jax array).
-    - ``step(problem, hp) -> fn(state, i_t) -> state``: the per-iteration
-      transition, safe to call inside jit/lax.scan. ``i_t`` is the (N,)
-      sample draw of this iteration; deterministic solvers ignore it.
-    - ``z_of(problem, hp) -> fn(state) -> (N, D)``: iterate read-out (SSDA's
-      primal read-out is a real computation, hence a factory too).
+    - ``step(problem, hp) -> fn(state, i_t, hp) -> state``: the
+      per-iteration transition, safe to call inside jit/lax.scan. ``i_t``
+      is the (N,) sample draw of this iteration; deterministic solvers
+      ignore it. The inner ``hp`` dict carries every non-static
+      hyperparameter plus ``"lam"`` (unless ``bake_lam``).
+    - ``z_of(problem, hp) -> fn(state, hp) -> (N, D)``: iterate read-out
+      (SSDA's primal read-out is a real computation, hence a factory too).
     - ``defaults``: the solver's hyperparameters with default values; the
       keys are also the *schema* — ``solve()`` rejects unknown overrides.
+    - ``static_hp``: names of hyperparameters that are *structural* (Python
+      loop counts, shapes) and must be baked at factory time. They join the
+      runner cache key; changing them recompiles. At factory time the ``hp``
+      mapping resolves static names only — reading a runtime-traced name
+      there raises, so a value can never be silently baked stale.
+    - ``bake_lam``: bake ``problem.lam`` at factory time instead of tracing
+      it (SSDA's conjugate-gradient map is factorized around ``lam``).
     - ``sparse_run``: optional sparse-communication backend with signature
       ``(problem, hp, steps, indices, z0, options) -> SparseRunResult``.
       ``None`` means the method has no sparse protocol (the deterministic
@@ -180,6 +202,8 @@ class SolverSpec:
     z_of: Callable[[Problem, Mapping[str, float]], Callable]
     defaults: Mapping[str, float]
     sparse_run: Callable | None = None
+    static_hp: tuple[str, ...] = ()
+    bake_lam: bool = False
 
     def supports_sparse_comm(self) -> bool:
         """Whether this method has a sparse-communication backend."""
@@ -213,6 +237,156 @@ def available_solvers() -> dict[str, bool]:
         name: spec.supports_sparse_comm()
         for name, spec in sorted(_REGISTRY.items())
     }
+
+
+# ---------------------------------------------------------------------------
+# Compiled-runner cache: one jitted chunked scan per (method, problem shape).
+# Hyperparameter values are traced arguments — a sweep compiles once.
+# ---------------------------------------------------------------------------
+
+
+class TracedHPError(KeyError):
+    """A factory read a runtime-traced hyperparameter at bake time."""
+
+    def __str__(self):
+        """The message verbatim (KeyError would repr-quote it)."""
+        return self.args[0]
+
+
+class _FactoryHP(Mapping):
+    """Factory-time view of the hyperparameters: the *static* names only.
+
+    Static names resolve to their values (they are part of the cache key);
+    as a Mapping this contains nothing else, so ``in`` / ``.get`` /
+    iteration answer honestly. Subscripting a runtime-traced name raises
+    ``TracedHPError`` (a KeyError) with a pointer to the ``hp`` argument —
+    a factory can never silently bake a value that later sweep calls would
+    then reuse stale.
+    """
+
+    def __init__(self, values: Mapping[str, float], static: tuple[str, ...]):
+        self._values = dict(values)
+        self._static = frozenset(static) & set(self._values)
+
+    def __getitem__(self, name: str):
+        if name in self._static:
+            return self._values[name]
+        if name in self._values:
+            raise TracedHPError(
+                f"hyperparameter {name!r} is runtime-traced; read it from "
+                "the hp argument inside the step/z_of function, or declare "
+                "it in SolverSpec.static_hp"
+            )
+        raise KeyError(name)
+
+    def __iter__(self):
+        return iter(k for k in self._values if k in self._static)
+
+    def __len__(self):
+        return len(self._static)
+
+
+def _dynamic_hp(spec: SolverSpec, problem: Problem, hp: Mapping) -> dict:
+    """The runtime-traced hp dict: non-static names + lam (unless baked).
+
+    Values are normalized to Python floats so jit sees one weak-typed
+    scalar signature per runner — different values never retrace.
+    """
+    dyn = {
+        k: float(v) for k, v in hp.items() if k not in spec.static_hp
+    }
+    if not spec.bake_lam:
+        dyn["lam"] = float(problem.lam)
+    return dyn
+
+
+def _runner_key(spec: SolverSpec, problem: Problem, hp: Mapping):
+    """(key, guards) for one (method, problem shape, static-hp structure).
+
+    The dataset enters by identity (guarded by a strong reference in the
+    entry); the mixing matrix by content fingerprint, so problems rebuilt
+    per sweep point (same data/graph, fresh equal W, different lam) share
+    one compiled runner. Hyperparameter *values* never enter the key —
+    only the static structure does.
+    """
+    key = (
+        spec.name,
+        runner_cache.problem_fingerprint(
+            problem.data, problem.spec, problem.graph, problem.w
+        ),
+        tuple((k, float(hp[k])) for k in spec.static_hp),
+        float(problem.lam) if spec.bake_lam else None,
+    )
+    return key, (problem.data,)
+
+
+@dataclasses.dataclass
+class _DenseRunner:
+    """One compiled dense-backend runner: chunked scan + iterate read-out.
+
+    ``chunk``/``z_read`` are the jitted entrypoints; ``run_chunk``/``z_fn``
+    are the untraced callables kept for ``solve_many`` to vmap (the batched
+    variants compile lazily into ``batched``, keyed by vmap signature).
+    """
+
+    init: Callable  # (z0) -> state, eager
+    run_chunk: Callable  # (state, idx_block, hp) -> state, untraced
+    z_fn: Callable  # (state, hp) -> (N, D), untraced
+    chunk: Callable  # jitted run_chunk (donated carry off-CPU)
+    z_read: Callable  # jitted z_fn
+    donates: bool  # whether chunk donates its carry argument
+    batched: dict = dataclasses.field(default_factory=dict)
+
+
+def _get_dense_runner(spec: SolverSpec, problem: Problem, hp: Mapping):
+    """Fetch (or compile) the dense runner for this (spec, problem, hp)."""
+    key, guards = _runner_key(spec, problem, hp)
+
+    def build() -> _DenseRunner:
+        fhp = _FactoryHP(hp, spec.static_hp)
+        step_fn = spec.step(problem, fhp)
+        z_fn = spec.z_of(problem, fhp)
+
+        def run_chunk(state, idx_block, hp_dyn):
+            runner_cache.DENSE.note_trace()  # trace-time only
+            st, _ = jax.lax.scan(
+                lambda s, i: (step_fn(s, i, hp_dyn), None), state, idx_block
+            )
+            return st
+
+        def read(state, hp_dyn):
+            runner_cache.DENSE.note_trace()
+            return z_fn(state, hp_dyn)
+
+        # donating the scan carry lets XLA reuse the state buffers in
+        # place; CPU does not implement donation (it would only warn)
+        donates = jax.default_backend() != "cpu"
+        return _DenseRunner(
+            init=lambda z0: spec.init(problem, fhp, z0),
+            run_chunk=run_chunk,
+            z_fn=z_fn,
+            chunk=jax.jit(run_chunk, donate_argnums=(0,) if donates else ()),
+            z_read=jax.jit(read),
+            donates=donates,
+        )
+
+    return runner_cache.DENSE.get_or_build(key, guards, build)
+
+
+def _get_batched_fns(runner: _DenseRunner, dyn_names) -> tuple:
+    """(chunk, z_read) vmapped over a leading (grid/seed) axis, cached.
+
+    hp entries map over axis 0 except ``lam`` (problem-level, shared);
+    state and the index stream always carry the batch axis.
+    """
+    sig = tuple(sorted(dyn_names))
+    if sig not in runner.batched:
+        hp_axes = {k: (None if k == "lam" else 0) for k in sig}
+        runner.batched[sig] = (
+            jax.jit(jax.vmap(runner.run_chunk, in_axes=(0, 0, hp_axes))),
+            jax.jit(jax.vmap(runner.z_fn, in_axes=(0, hp_axes))),
+        )
+    return runner.batched[sig]
 
 
 # ---------------------------------------------------------------------------
@@ -275,25 +449,44 @@ class _Recorder:
         self.zs: list[np.ndarray] | None = [] if keep_snapshots else None
 
     def push(self, it: int, z) -> None:
-        """Record consensus / distance-to-z* of iterates ``z`` at step ``it``."""
+        """Record consensus / distance-to-z* of iterates ``z`` at step ``it``.
+
+        ``z`` is (N, D), or (B, N, D) for a batched ``solve_many`` run — the
+        metrics reduce over the trailing (N, D) axes either way.
+        """
         z = np.asarray(z)
-        zbar = z.mean(0, keepdims=True)
+        zbar = z.mean(-2, keepdims=True)
         self.iters.append(it)
-        self.consensus.append(float(np.mean(np.sum((z - zbar) ** 2, -1))))
+        self.consensus.append(np.mean(np.sum((z - zbar) ** 2, -1), -1))
         if self.z_star is not None:
             self.dist2.append(
-                float(np.mean(np.sum((z - self.z_star[None]) ** 2, -1)))
+                np.mean(np.sum((z - self.z_star) ** 2, -1), -1)
             )
         if self.zs is not None:
             self.zs.append(z)
 
     def arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, Any]:
-        """(iters, dist2, consensus, zs) as numpy arrays."""
+        """(iters, dist2, consensus, zs) as numpy arrays.
+
+        Scalar pushes give (R,) metrics and (R, N, D) snapshots; batched
+        pushes give (B, R) metrics and (B, R, N, D) snapshots — the record
+        axis always ends up adjacent to the values it indexes.
+        """
+
+        def stack_metric(vals):
+            a = np.asarray(vals)  # (R,) or (R, B)
+            return a if a.ndim == 1 else np.moveaxis(a, 0, 1)
+
+        zs = None
+        if self.zs:
+            zs = np.stack(self.zs)  # (R, [B,] N, D)
+            if zs.ndim == 4:
+                zs = np.moveaxis(zs, 0, 1)
         return (
             np.asarray(self.iters),
-            np.asarray(self.dist2) if self.dist2 else np.zeros(0),
-            np.asarray(self.consensus),
-            np.stack(self.zs) if self.zs else None,
+            stack_metric(self.dist2) if self.dist2 else np.zeros(0),
+            stack_metric(self.consensus),
+            zs,
         )
 
 
@@ -317,6 +510,12 @@ def solve(
     **hyperparams,
 ) -> SolveResult:
     """Run ``method`` on ``problem`` over ``comm`` and return a SolveResult.
+
+    Compilation is amortized across calls: the jitted runner is fetched
+    from the keyed compiled-runner cache (``core.runner_cache``) and the
+    hyperparameter values (plus ``lam``) are traced arguments, so repeated
+    calls on the same problem shape — a sweep — skip XLA entirely. For a
+    whole grid in one call see ``solve_many``.
 
     method: a registered solver name (``available_solvers()`` lists them).
     comm: ``"dense"`` (true neighbor exchange, the mixing matmul) or
@@ -400,25 +599,27 @@ def solve(
             },
         )
 
-    # ---- dense backend: chunked scan between record points ----------------
+    # ---- dense backend: cached compiled runner, hp as traced arguments ----
     t0 = time.perf_counter()
-    step_fn = spec.step(problem, hp)
-    z_of = spec.z_of(problem, hp)
+    runner = _get_dense_runner(spec, problem, hp)
+    hp_dyn = _dynamic_hp(spec, problem, hp)
     idx_j = jnp.asarray(indices[:steps], jnp.int32)
 
-    @jax.jit
-    def chunk(state, idx_block):
-        st, _ = jax.lax.scan(
-            lambda s, i: (step_fn(s, i), None), state, idx_block
+    state = runner.init(jnp.asarray(z0))
+    if runner.donates:
+        # init factories may alias leaves (dsba's z/z_prev are the same
+        # array at t=0); donation rejects duplicate buffers, so de-alias
+        # the initial carry once — later carries are distinct scan outputs
+        state = jax.tree_util.tree_map(
+            lambda x: jnp.array(x, copy=True), state
         )
-        return st
-
-    state = spec.init(problem, hp, jnp.asarray(z0))
     prev = 0
+    z_final = None
     for pt in pts:
-        state = chunk(state, idx_j[prev:pt])
+        state = runner.chunk(state, idx_j[prev:pt], hp_dyn)
         prev = pt
-        rec.push(pt, z_of(state))
+        z_final = runner.z_read(state, hp_dyn)
+        rec.push(pt, z_final)
     wall = time.perf_counter() - t0
 
     iters, dist2, cons, zs = rec.arrays()
@@ -433,9 +634,219 @@ def solve(
         doubles_received=doubles,
         ints_received=np.zeros_like(doubles),
         wall_time=wall,
-        z=np.asarray(z_of(state)),
+        z=np.asarray(z_final),
         state=state,
         zs=zs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# solve_many(): the batched sweep entrypoint
+# ---------------------------------------------------------------------------
+
+
+def solve_many(
+    problem: Problem,
+    method: str = "dsba",
+    comm: str = "dense",
+    *,
+    steps: int,
+    grid: list[Mapping[str, float]] | None = None,
+    seeds: list[int] | None = None,
+    record_every: int = 50,
+    seed: int = 0,
+    z0: np.ndarray | None = None,
+    indices: np.ndarray | None = None,
+    keep_snapshots: bool = False,
+    comm_options: dict | None = None,
+    **common_hp,
+) -> SolveResult:
+    """Run a hyperparameter/seed sweep as ONE batched computation.
+
+    The sweep axis B is ``len(grid)`` (per-entry hyperparameter overrides),
+    ``len(seeds)`` (per-entry sample streams), or both (paired — equal
+    lengths required). On the dense backend the whole grid is vmapped over
+    a leading batch axis of the cached compiled runner: one executable,
+    one scan, every grid point advancing in lockstep.
+
+    Fallback to the cached *sequential* path (one warm ``solve()`` per
+    entry — still compile-free after the first) happens when the grid is
+    not vmappable:
+
+    - ``comm="sparse"`` — the relay scan's message accounting is
+      data-dependent per seed and not batchable;
+    - a grid entry overrides a ``static_hp`` (structural, must recompile).
+
+    Returns one ``SolveResult`` whose per-run arrays carry a leading B
+    axis: ``dist2``/``consensus`` are (B, R), ``doubles_received``/
+    ``ints_received`` (B, R, N), ``z`` (B, N, D), ``zs`` (B, R, N, D).
+    ``iters`` stays (R,) — record points are shared. ``extras`` records
+    ``grid``, ``seeds`` and whether the batched path ran (``"batched"``).
+
+    indices: optional explicit sample streams — (>= steps, N) shared by
+    every entry, or (B, >= steps, N) per entry. Defaults to
+    ``draw_indices`` per entry seed (``seeds[b]``, else the shared
+    ``seed``).
+    """
+    spec = get_solver(method)
+    if grid is None and seeds is None:
+        raise ValueError("solve_many needs a grid, seeds, or both")
+    entries = [dict(e) for e in grid] if grid is not None else None
+    if entries is not None and seeds is not None and len(entries) != len(seeds):
+        raise ValueError(
+            f"grid ({len(entries)}) and seeds ({len(seeds)}) must pair up"
+        )
+    n_runs = len(entries) if entries is not None else len(seeds)
+    if n_runs < 1:
+        raise ValueError("solve_many needs at least one grid/seed entry")
+    if entries is None:
+        entries = [{} for _ in range(n_runs)]
+    seeds_list = list(seeds) if seeds is not None else [seed] * n_runs
+
+    known = set(spec.defaults)
+    for ent in (common_hp, *entries):
+        unknown = set(ent) - known
+        if unknown:
+            raise TypeError(
+                f"{method!r} got unknown hyperparameters {sorted(unknown)}; "
+                f"accepts {sorted(known)}"
+            )
+    merged = [dict(spec.defaults, **common_hp, **e) for e in entries]
+
+    data = problem.data
+    n, q = data.n_nodes, data.q
+    idx_b = _sweep_indices(indices, n_runs, steps, n, q, seeds_list)
+
+    ragged = any(k in spec.static_hp for e in entries for k in e)
+    if comm != "dense" or ragged:
+        return _solve_many_sequential(
+            problem, method, comm, steps=steps, record_every=record_every,
+            z0=z0, keep_snapshots=keep_snapshots, comm_options=comm_options,
+            merged=merged, entries=entries, seeds=seeds_list, idx_b=idx_b,
+        )
+
+    # ---- batched path: vmap the cached runner over the grid axis ----------
+    if comm_options:
+        raise ValueError("comm_options only apply to comm='sparse'")
+    if steps < 1:
+        raise ValueError("steps must be >= 1")
+    if record_every < 1:
+        raise ValueError("record_every must be >= 1")
+    D = problem.dim
+    dt = data.val.dtype
+    if z0 is None:
+        z0 = np.zeros((n, D), dtype=dt)
+
+    t0 = time.perf_counter()
+    base_hp = dict(spec.defaults, **common_hp)
+    runner = _get_dense_runner(spec, problem, base_hp)
+    dyn_names = tuple(_dynamic_hp(spec, problem, base_hp))
+    chunk_b, z_read_b = _get_batched_fns(runner, dyn_names)
+
+    # hp arrays in the DATA dtype so batched arithmetic promotes exactly
+    # like the sequential path's weak-typed python-float scalars
+    hp_dyn = {
+        k: np.asarray([m[k] for m in merged], dtype=dt)
+        for k in dyn_names if k != "lam"
+    }
+    if "lam" in dyn_names:
+        hp_dyn["lam"] = float(problem.lam)
+
+    state0 = runner.init(jnp.asarray(z0))
+    state = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_runs,) + x.shape), state0
+    )
+    idx_j = jnp.asarray(idx_b[:, :steps], jnp.int32)
+    pts = _record_points(steps, record_every)
+    rec = _Recorder(problem.z_star, keep_snapshots)
+    prev = 0
+    z_final = None
+    for pt in pts:
+        state = chunk_b(state, idx_j[:, prev:pt], hp_dyn)
+        prev = pt
+        z_final = z_read_b(state, hp_dyn)
+        rec.push(pt, z_final)
+    wall = time.perf_counter() - t0
+
+    iters, dist2, cons, zs = rec.arrays()
+    per_node = dense_doubles_per_iter(problem.graph, D)  # (N,)
+    doubles = iters[:, None] * per_node[None, :]
+    doubles = np.broadcast_to(doubles, (n_runs,) + doubles.shape).copy()
+    return SolveResult(
+        method=method,
+        comm=comm,
+        iters=iters,
+        dist2=dist2,
+        consensus=cons,
+        doubles_received=doubles,
+        ints_received=np.zeros_like(doubles),
+        wall_time=wall,
+        z=np.asarray(z_final),
+        state=state,
+        zs=zs,
+        extras={"batched": True, "grid": entries, "seeds": seeds_list},
+    )
+
+
+def _sweep_indices(indices, n_runs, steps, n, q, seeds_list) -> np.ndarray:
+    """(B, >= steps, N) sample streams for a sweep, drawn or validated."""
+    if indices is None:
+        return np.stack(
+            [draw_indices(steps, n, q, s) for s in seeds_list]
+        )
+    indices = np.asarray(indices)
+    if indices.ndim == 2:
+        indices = np.broadcast_to(
+            indices[None], (n_runs,) + indices.shape
+        )
+    if (
+        indices.ndim != 3
+        or indices.shape[0] != n_runs
+        or indices.shape[1] < steps
+        or indices.shape[2] != n
+    ):
+        raise ValueError(
+            f"indices must be (>= steps, N) or (B, >= steps, N) = "
+            f"({n_runs}, >={steps}, {n}), got {indices.shape}"
+        )
+    return indices
+
+
+def _solve_many_sequential(
+    problem, method, comm, *, steps, record_every, z0, keep_snapshots,
+    comm_options, merged, entries, seeds, idx_b,
+) -> SolveResult:
+    """The documented fallback: one warm cached ``solve()`` per grid entry."""
+    results = [
+        solve(
+            problem, method, comm, steps=steps, record_every=record_every,
+            z0=z0, indices=idx_b[b], keep_snapshots=keep_snapshots,
+            comm_options=comm_options, **merged[b],
+        )
+        for b in range(len(merged))
+    ]
+    r0 = results[0]
+    return SolveResult(
+        method=method,
+        comm=comm,
+        iters=r0.iters,
+        dist2=np.stack([r.dist2 for r in results]),
+        consensus=np.stack([r.consensus for r in results]),
+        doubles_received=np.stack([r.doubles_received for r in results]),
+        ints_received=np.stack([r.ints_received for r in results]),
+        wall_time=sum(r.wall_time for r in results),
+        z=np.stack([r.z for r in results]),
+        state=[r.state for r in results],
+        zs=(
+            np.stack([r.zs for r in results])
+            if keep_snapshots else None
+        ),
+        extras={
+            "batched": False,
+            "grid": entries,
+            "seeds": seeds,
+            "per_run_extras": [r.extras for r in results],
+        },
     )
 
 
@@ -444,11 +855,14 @@ def solve(
 # ---------------------------------------------------------------------------
 
 
-def _dsba_cfg(problem: Problem, hp, method: str) -> DSBAConfig:
-    """Map (problem, hyperparams) onto the Algorithm-1 step config."""
-    return DSBAConfig(
-        spec=problem.spec, alpha=hp["alpha"], lam=problem.lam, method=method
-    )
+def _dsba_placeholder_cfg(problem: Problem, method: str) -> DSBAConfig:
+    """Step config with hp placeholders (alpha/lam arrive traced at runtime).
+
+    ``init_state`` reads only ``cfg.spec``; ``make_step_fn`` substitutes the
+    traced values via its ``hp`` argument before any arithmetic touches the
+    placeholders.
+    """
+    return DSBAConfig(spec=problem.spec, alpha=0.0, lam=0.0, method=method)
 
 
 def _make_dsba_family(method: str, default_alpha: float) -> SolverSpec:
@@ -456,22 +870,35 @@ def _make_dsba_family(method: str, default_alpha: float) -> SolverSpec:
 
     def init(problem, hp, z0):
         """SAGA-table warm start (Algorithm 1 line 1) at ``z0``."""
-        return _dsba_init_state(_dsba_cfg(problem, hp, method), problem.data, z0)
+        return _dsba_init_state(
+            _dsba_placeholder_cfg(problem, method), problem.data, z0
+        )
 
     def step(problem, hp):
         """Device-resident Algorithm-1 step via ``dsba.make_step_fn``."""
-        return _dsba_make_step_fn(
-            _dsba_cfg(problem, hp, method), problem.data, problem.w
+        raw = _dsba_make_step_fn(
+            _dsba_placeholder_cfg(problem, method), problem.data, problem.w
         )
+
+        def fn(state, i_t, hp_run):
+            return raw(
+                state, i_t,
+                hp={"alpha": hp_run["alpha"], "lam": hp_run["lam"]},
+            )
+
+        return fn
 
     def z_of(problem, hp):
         """Iterates live directly on the state."""
-        return lambda state: state.z
+        return lambda state, hp_run: state.z
 
     def sparse_run(problem, hp, steps, indices, z0, options):
         """The Section-5.1 delta relay (``core.sparse_comm.run_sparse``)."""
         return _sparse_comm.run_sparse(
-            _dsba_cfg(problem, hp, method),
+            DSBAConfig(
+                spec=problem.spec, alpha=hp["alpha"], lam=problem.lam,
+                method=method,
+            ),
             problem.data,
             problem.graph,
             problem.w,
@@ -500,12 +927,16 @@ register_solver(_make_dsba_family("dsa", default_alpha=0.2))
 # ---------------------------------------------------------------------------
 
 
-def _full_operator(spec: OperatorSpec, feats, labels, lam):
-    """G(Z): (N, D) -> (N, D), full local operator incl. regularizer."""
+def _full_operator(spec: OperatorSpec, feats, labels):
+    """G(Z, lam): (N, D) -> (N, D), full local operator incl. regularizer.
+
+    ``lam`` is a call-time argument (traced in the compiled runners), not a
+    baked constant — a regularization-path sweep reuses one executable.
+    """
     t = spec.tail_dim
     d = feats.shape[-1]
 
-    def G(Z):
+    def G(Z, lam):
         head, tail = Z[:, :d], Z[:, d:]
         u = jnp.einsum("nqd,nd->nq", feats, head)
         tails = jnp.broadcast_to(tail[:, None, :], u.shape + (t,))
@@ -536,15 +967,15 @@ def _extra_init(problem, hp, z0):
 def _extra_step(problem, hp):
     """EXTRA (Shi et al. 2015a), eq. (47) form with first-step special case."""
     feats, labels = _dense_setup(problem)
-    G = _full_operator(problem.spec, feats, labels, problem.lam)
-    alpha = hp["alpha"]
+    G = _full_operator(problem.spec, feats, labels)
     dt = feats.dtype
     wj = jnp.asarray(problem.w, dt)
     wtj = jnp.asarray(w_tilde(problem.w), dt)
 
-    def step(carry, i_t):
+    def step(carry, i_t, hp_run):
+        alpha, lam = hp_run["alpha"], hp_run["lam"]
         z, z_prev, g_prev, t = carry
-        g = G(z)
+        g = G(z, lam)
         z1 = jnp.where(
             t == 0,
             wj @ z - alpha * g,
@@ -563,15 +994,15 @@ def _dlm_init(problem, hp, z0):
 def _dlm_step(problem, hp):
     """DLM (Ling et al. 2015): linearized decentralized ADMM."""
     feats, labels = _dense_setup(problem)
-    G = _full_operator(problem.spec, feats, labels, problem.lam)
-    c, beta = hp["c"], hp["beta"]
+    G = _full_operator(problem.spec, feats, labels)
     dt = feats.dtype
     lap = jnp.asarray(problem.graph.laplacian, dt)
     deg = jnp.asarray(problem.graph.degrees, dt)[:, None]
 
-    def step(carry, i_t):
+    def step(carry, i_t, hp_run):
+        c, beta, lam = hp_run["c"], hp_run["beta"], hp_run["lam"]
         z, lam_dual = carry
-        grad_aug = G(z) + lam_dual + 2.0 * c * (lap @ z)
+        grad_aug = G(z, lam) + lam_dual + 2.0 * c * (lap @ z)
         z1 = z - grad_aug / (2.0 * c * deg + beta)
         lam1 = lam_dual + c * (lap @ z1)
         return (z1, lam1)
@@ -579,32 +1010,33 @@ def _dlm_step(problem, hp):
     return step
 
 
-# Single-slot share of the grad f* closure: solve() invokes the step and
-# z_of factories back to back on the same (problem, hp), and the build is
-# real work (Gram + N Cholesky factorizations for ridge). The slot holds the
-# problem strongly, so the identity check cannot alias a recycled id; the
-# value snapshots (data, lam, spec) at build time so mutating the problem
-# invalidates the hit.
+# Single-slot share of the grad f* closure: the runner-cache build invokes
+# the step and z_of factories back to back on the same (problem, hp), and
+# the build is real work (Gram + N Cholesky factorizations for ridge). The
+# slot holds the problem strongly, so the identity check cannot alias a
+# recycled id; the value snapshots (data, lam, spec) at build time so
+# mutating the problem invalidates the hit. lam is baked here — which is
+# why the ssda SolverSpec sets ``bake_lam`` (the runner cache keys on lam).
 _SSDA_CG_CACHE: list = []
 
 
-def _ssda_conj_grad(problem: Problem, hp):
+def _ssda_conj_grad(problem: Problem, inner_newton: int):
     """grad f*_n read-out: Cholesky for ridge, damped Newton otherwise.
 
-    Built once per (problem, hp) — see ``_SSDA_CG_CACHE``.
+    Built once per (problem, inner_newton) — see ``_SSDA_CG_CACHE``.
     """
-    for p, data_ref, lam_ref, spec_ref, hp_ref, cg in _SSDA_CG_CACHE:
+    for p, data_ref, lam_ref, spec_ref, inner_ref, cg in _SSDA_CG_CACHE:
         if (p is problem and p.data is data_ref and p.lam == lam_ref
-                and p.spec == spec_ref and hp_ref == dict(hp)):
+                and p.spec == spec_ref and inner_ref == inner_newton):
             return cg
-    cg = _build_ssda_conj_grad(problem, hp)
+    cg = _build_ssda_conj_grad(problem, inner_newton)
     _SSDA_CG_CACHE[:] = [
-        (problem, problem.data, problem.lam, problem.spec, dict(hp), cg)
+        (problem, problem.data, problem.lam, problem.spec, inner_newton, cg)
     ]
     return cg
 
 
-def _build_ssda_conj_grad(problem: Problem, hp):
+def _build_ssda_conj_grad(problem: Problem, inner_newton: int):
     """Construct the grad f*_n closure (the cached work behind the cache)."""
     spec, lam = problem.spec, problem.lam
     if spec.tail_dim:
@@ -615,7 +1047,6 @@ def _build_ssda_conj_grad(problem: Problem, hp):
     labels = jnp.asarray(problem.data.y)
     n, q, d = feats.shape
     dt = feats.dtype
-    inner_newton = int(hp["inner_newton"])
 
     if spec.kind == "ridge":
         # grad f_n(x) = A^T(Ax - y)/q + lam x ; grad f*_n(s) solves it = s
@@ -660,13 +1091,13 @@ def _ssda_init(problem, hp, z0):
 
 def _ssda_step(problem, hp):
     """SSDA (Scaman et al. 2017): accelerated gradient ascent on the dual."""
-    conj_grad = _ssda_conj_grad(problem, hp)
-    eta, momentum = hp["eta"], hp["momentum"]
+    conj_grad = _ssda_conj_grad(problem, int(hp["inner_newton"]))
     n = problem.data.n_nodes
     dt = jnp.asarray(problem.data.val).dtype
     i_minus_w = jnp.eye(n, dtype=dt) - jnp.asarray(problem.w, dt)
 
-    def step(carry, i_t):
+    def step(carry, i_t, hp_run):
+        eta, momentum = hp_run["eta"], hp_run["momentum"]
         m, m_prev = carry
         v = m + momentum * (m - m_prev)
         x = conj_grad(-v)  # primal read-out: grad f*(-(U Lambda)_n)
@@ -677,10 +1108,12 @@ def _ssda_step(problem, hp):
 
 
 def _ssda_z_of(problem, hp):
-    """Primal read-out grad f*(-m): a real computation, not a field access."""
-    conj_grad = _ssda_conj_grad(problem, hp)
-    read = jax.jit(lambda m: conj_grad(-m))
-    return lambda state: read(state[0])
+    """Primal read-out grad f*(-m): a real computation, not a field access.
+
+    Jitted by the runner cache alongside the step — no inner jit here.
+    """
+    conj_grad = _ssda_conj_grad(problem, int(hp["inner_newton"]))
+    return lambda state, hp_run: conj_grad(-state[0])
 
 
 register_solver(
@@ -688,7 +1121,7 @@ register_solver(
         name="extra",
         init=_extra_init,
         step=_extra_step,
-        z_of=lambda problem, hp: lambda state: state[0],
+        z_of=lambda problem, hp: lambda state, hp_run: state[0],
         defaults={"alpha": 0.3},
     )
 )
@@ -697,7 +1130,7 @@ register_solver(
         name="dlm",
         init=_dlm_init,
         step=_dlm_step,
-        z_of=lambda problem, hp: lambda state: state[0],
+        z_of=lambda problem, hp: lambda state, hp_run: state[0],
         defaults={"c": 0.3, "beta": 1.0},
     )
 )
@@ -708,5 +1141,9 @@ register_solver(
         step=_ssda_step,
         z_of=_ssda_z_of,
         defaults={"eta": 0.05, "momentum": 0.5, "inner_newton": 8},
+        # inner_newton is a Python loop count (structural); lam is baked
+        # into the Cholesky / Newton factorization of grad f*.
+        static_hp=("inner_newton",),
+        bake_lam=True,
     )
 )

@@ -75,6 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import runner_cache
 from repro.core.dsba import DSBAConfig, init_state, make_step_fn
 from repro.core.mixing import Graph, w_tilde
 from repro.kernels.ops import saga_sparse_axpy
@@ -201,19 +202,38 @@ def run_sparse(
 # Vectorized engine
 # ---------------------------------------------------------------------------
 
-def _run_vectorized(
-    cfg, data, graph, w, steps, indices, z0, *, verify, use_pallas
-) -> SparseRunResult:
+def _sparse_scan_key(cfg, data, graph, w, verify, kernel_mode):
+    """(key, guards) for one compiled relay scan (see core.runner_cache).
+
+    alpha/lam are NOT keyed — they are traced scan arguments, so a
+    hyperparameter sweep over the same (method, problem shape, graph)
+    reuses one executable. ``verify`` changes the carry structure and
+    ``kernel_mode`` the densification lowering, so both recompile.
+    """
+    key = (
+        "relay",
+        cfg.method,
+        runner_cache.problem_fingerprint(data, cfg.spec, graph, w),
+        bool(verify),
+        kernel_mode,
+    )
+    return key, (data,)
+
+
+def _build_sparse_scan(cfg, data, graph, w, *, verify, kernel_mode):
+    """Compile the whole-run relay scan with (alpha, lam) traced.
+
+    Returns ``(scan, tb)``: the jitted
+    ``scan(carry0, xs, mix0, hp) -> (carry, (zs, nnzs))`` and the static
+    protocol tables (the closed-form accounting needs ``tb.dist``).
+    """
     spec = cfg.spec
-    alpha, lam = cfg.alpha, cfg.lam
     n = data.n_nodes
     q = data.q
     tail = spec.tail_dim
     d = data.d
     D = d + tail
     dt = data.val.dtype
-    if z0 is None:
-        z0 = np.zeros((n, D), dtype=dt)
 
     wt = w_tilde(w)
     tb = _protocol_tables(graph, wt)
@@ -221,14 +241,12 @@ def _run_vectorized(
     scale = (q - 1.0) / q
 
     step = make_step_fn(cfg, data, w)
-    state0 = init_state(cfg, data, jnp.asarray(z0))
 
     # constants baked into the compiled scan
     dist_j = jnp.asarray(tb.dist, jnp.int32)
     nbr_j = jnp.asarray(tb.nbr_pad)
     wtn_j = jnp.asarray(tb.wt_pad, dt)
     padm_j = jnp.asarray(tb.pad_mask)
-    mix0_j = jnp.asarray(w @ z0, dt)  # t=0 mixing: z^0 is consensus-shared
     iu = jnp.arange(n)
     width = tb.nbr_pad.shape[1]
 
@@ -255,15 +273,6 @@ def _run_vectorized(
     else:
         wave_xs = None
 
-    if use_pallas not in ("auto", "on", "interpret", "off"):
-        raise ValueError(f"unknown use_pallas mode {use_pallas!r}")
-    # This path follows the protocol spec rather than kernels.ops "auto"
-    # (which falls back to the jnp oracle off-TPU): the relay's delta
-    # densification stays on the Pallas kernel everywhere, interpret=True
-    # being the CPU fallback. Resolve "auto" here, dispatch through ops.
-    kernel_mode = use_pallas
-    if kernel_mode == "auto":
-        kernel_mode = "on" if jax.default_backend() == "tpu" else "interpret"
     interpret = kernel_mode == "interpret"
 
     def densify_delta(st) -> jax.Array:
@@ -287,7 +296,15 @@ def _run_vectorized(
             acc = acc + wts[:, a, None] * (2.0 * g_cur[:, a] - g_prev[:, a])
         return acc
 
-    def body(carry, xs):
+    def scan_all(carry0, xs, mix0, hp):
+        # runs only while tracing: counts compiles, not calls
+        runner_cache.SPARSE.note_trace()
+        alpha, lam = hp["alpha"], hp["lam"]
+        return jax.lax.scan(
+            lambda carry, x: body(carry, x, mix0, alpha, lam, hp), carry0, xs
+        )
+
+    def body(carry, xs, mix0, alpha, lam, hp):
         state, z1, R, DD, SR, Z, err, ok = carry
         t, i_t = xs
         jt = t % depth
@@ -369,7 +386,7 @@ def _run_vectorized(
         g_cur = R[jt, iu[:, None], nbr_j]  # (N, A, D)
         g_prev = R[jtm1, iu[:, None], nbr_j]
         mix_rows = neighborhood_sum(g_cur, g_prev, wtn_j)
-        mix_rows = jnp.where(t == 0, mix0_j, mix_rows)
+        mix_rows = jnp.where(t == 0, mix0, mix_rows)
         if verify:
             s_cur = SR[jt, iu[:, None], nbr_j]
             s_prev = SR[jtm1, iu[:, None], nbr_j]
@@ -378,11 +395,45 @@ def _run_vectorized(
             )
 
         # -- advance all nodes with the shared local update -----------------
-        state = step(state, i_t, mix_rows)
+        state = step(state, i_t, mix_rows, hp=hp)
         DD = DD.at[jt].set(densify_delta(state))
         nnz_t = jnp.sum(state.dval_prev != 0, axis=-1).astype(jnp.int32)
         return (state, z1, R, DD, SR, Z, err, ok), (state.z, nnz_t)
 
+    return jax.jit(scan_all), tb
+
+
+def _run_vectorized(
+    cfg, data, graph, w, steps, indices, z0, *, verify, use_pallas
+) -> SparseRunResult:
+    spec = cfg.spec
+    n = data.n_nodes
+    tail = spec.tail_dim
+    D = data.d + tail
+    dt = data.val.dtype
+    if z0 is None:
+        z0 = np.zeros((n, D), dtype=dt)
+
+    if use_pallas not in ("auto", "on", "interpret", "off"):
+        raise ValueError(f"unknown use_pallas mode {use_pallas!r}")
+    # This path follows the protocol spec rather than kernels.ops "auto"
+    # (which falls back to the jnp oracle off-TPU): the relay's delta
+    # densification stays on the Pallas kernel everywhere, interpret=True
+    # being the CPU fallback. Resolve "auto" here, dispatch through ops.
+    kernel_mode = use_pallas
+    if kernel_mode == "auto":
+        kernel_mode = "on" if jax.default_backend() == "tpu" else "interpret"
+
+    key, guards = _sparse_scan_key(cfg, data, graph, w, verify, kernel_mode)
+    scan, tb = runner_cache.SPARSE.get_or_build(
+        key, guards,
+        lambda: _build_sparse_scan(
+            cfg, data, graph, w, verify=verify, kernel_mode=kernel_mode
+        ),
+    )
+    depth, dmax = tb.depth, tb.dmax
+
+    state0 = init_state(cfg, data, jnp.asarray(z0))
     R0 = jnp.zeros((depth, n, n, D), dt)
     R0 = R0.at[0].set(jnp.broadcast_to(jnp.asarray(z0, dt), (n, n, D)))
     DD0 = jnp.zeros((depth, n, D), dt)
@@ -404,9 +455,12 @@ def _run_vectorized(
     )
     ts = jnp.arange(steps, dtype=jnp.int32)
     idx_j = jnp.asarray(indices[:steps], jnp.int32)
+    mix0 = jnp.asarray(w @ z0, dt)  # t=0 mixing: z^0 is consensus-shared
+    hp = {"alpha": float(cfg.alpha), "lam": float(cfg.lam)}
 
-    scan = jax.jit(lambda c, x: jax.lax.scan(body, c, x))
-    (_, _, _, _, _, _, err, ok), (zs, nnzs) = scan(carry0, (ts, idx_j))
+    (_, _, _, _, _, _, err, ok), (zs, nnzs) = scan(
+        carry0, (ts, idx_j), mix0, hp
+    )
 
     if verify and not bool(ok):
         raise ProtocolViolation(

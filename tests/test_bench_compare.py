@@ -1,0 +1,59 @@
+"""The benchmark regression gate (`benchmarks/compare.py`).
+
+Pins the gate semantics the sweep entries rely on: baseline-missing
+entries are informational ("NEW", never fail — a PR adding `sweep_*`
+benchmarks passes before its baseline lands), removed entries are
+informational, and only matched entries are gated at the ratio.
+"""
+import json
+
+import pytest
+
+from benchmarks import compare as C
+
+
+def _payload(tmp_path, name, entries):
+    p = tmp_path / name
+    p.write_text(json.dumps({"schema": 1, "fast": True, "entries": entries}))
+    return str(p)
+
+
+def test_new_entries_are_informational_not_failures(capsys):
+    base = {"dsba_step": 100.0}
+    new = {"dsba_step": 110.0, "sweep_solve_second_call": 9000.0}
+    failures = C.compare(base, new, max_ratio=1.5)
+    assert failures == []
+    out = capsys.readouterr().out
+    assert "NEW      sweep_solve_second_call" in out
+    assert "informational" in out
+    assert "1 new / 0 removed" in out
+
+
+def test_removed_entries_are_informational(capsys):
+    failures = C.compare({"gone": 50.0, "kept": 10.0}, {"kept": 10.0}, 1.5)
+    assert failures == []
+    assert "REMOVED  gone" in capsys.readouterr().out
+
+
+def test_matched_regression_still_fails():
+    failures = C.compare({"hot": 100.0}, {"hot": 151.0}, 1.5)
+    assert len(failures) == 1 and "hot" in failures[0]
+    assert C.compare({"hot": 100.0}, {"hot": 149.0}, 1.5) == []
+
+
+def test_main_exit_codes(tmp_path, monkeypatch, capsys):
+    base = _payload(tmp_path, "base.json", {"a": 100.0})
+    ok = _payload(tmp_path, "ok.json", {"a": 120.0, "b": 5.0})
+    bad = _payload(tmp_path, "bad.json", {"a": 200.0})
+    monkeypatch.setattr("sys.argv", ["compare", base, ok])
+    assert C.main() == 0
+    monkeypatch.setattr("sys.argv", ["compare", base, bad])
+    assert C.main() == 1
+    capsys.readouterr()
+
+
+def test_unknown_schema_rejected(tmp_path):
+    p = tmp_path / "x.json"
+    p.write_text(json.dumps({"schema": 99, "entries": {}}))
+    with pytest.raises(SystemExit, match="schema"):
+        C.load(str(p))

@@ -10,10 +10,12 @@ Two claims:
    exactly: bit-equal snapshot traces for dsba/dsa, <=1e-12 across
    ridge/logistic/auc on ring + Erdős–Rényi graphs for the baselines.
 """
+import warnings
+
 import numpy as np
 import pytest
 
-from repro.core import mixing, reference
+from repro.core import deprecation, mixing, reference
 from repro.core.baselines import run_dlm, run_extra, run_ssda
 from repro.core.dsba import DSBAConfig, draw_indices
 from repro.core.dsba import run as legacy_run
@@ -33,6 +35,14 @@ STEPS = 24
 REC = 8
 GRAPHS = ["ring", "erdos_renyi"]
 TASKS = ["ridge", "logistic", "auc"]
+
+
+@pytest.fixture
+def fresh_deprecations():
+    """Shim warnings fire once per process; reset so this test sees them."""
+    deprecation.reset()
+    yield
+    deprecation.reset()
 
 
 def _problem(task, gname="erdos_renyi", n_nodes=5, q=6, d=16, k=4, lam=1e-2,
@@ -154,12 +164,13 @@ def test_solve_replays_identically_from_seed_and_indices():
 
 @pytest.mark.parametrize("gname", GRAPHS)
 @pytest.mark.parametrize("task", TASKS)
-def test_dsba_dsa_shims_bit_identical(task, gname):
+def test_dsba_dsa_shims_bit_identical(task, gname, fresh_deprecations):
     problem = _problem(task, gname)
     n, q = problem.data.n_nodes, problem.data.q
     indices = draw_indices(STEPS, n, q, seed=5)
     for method in ("dsba", "dsa"):
         cfg = DSBAConfig(problem.spec, 0.3, problem.lam, method=method)
+        deprecation.reset()
         with pytest.warns(DeprecationWarning):
             legacy = legacy_run(
                 cfg, problem.data, problem.w, STEPS, record_every=REC,
@@ -174,11 +185,12 @@ def test_dsba_dsa_shims_bit_identical(task, gname):
 
 @pytest.mark.parametrize("gname", GRAPHS)
 @pytest.mark.parametrize("task", TASKS)
-def test_baseline_shims_trace_match(task, gname):
+def test_baseline_shims_trace_match(task, gname, fresh_deprecations):
     problem = _problem(task, gname)
     z_star = problem.solve_star()
     data, w, lam = problem.data, problem.w, problem.lam
 
+    deprecation.reset()
     with pytest.warns(DeprecationWarning):
         legacy = run_extra(problem.spec, data, w, alpha=0.2, lam=lam,
                            steps=STEPS, z_star=z_star, record_every=REC)
@@ -190,6 +202,7 @@ def test_baseline_shims_trace_match(task, gname):
     np.testing.assert_allclose(legacy.consensus, new.consensus, rtol=0,
                                atol=1e-12)
 
+    deprecation.reset()
     with pytest.warns(DeprecationWarning):
         legacy = run_dlm(problem.spec, data, problem.graph, c=0.3, beta=1.0,
                          lam=lam, steps=STEPS, z_star=z_star,
@@ -202,6 +215,7 @@ def test_baseline_shims_trace_match(task, gname):
     np.testing.assert_allclose(legacy.dist2, new.dist2, rtol=0, atol=1e-12)
 
     if task != "auc":  # the paper: SSDA does not apply to the AUC saddle
+        deprecation.reset()
         with pytest.warns(DeprecationWarning):
             legacy = run_ssda(problem.spec, data, w, eta=0.05, momentum=0.5,
                               lam=lam, steps=STEPS, z_star=z_star,
@@ -218,3 +232,27 @@ def test_ssda_rejects_auc_tail():
     problem = _problem("auc")
     with pytest.raises(NotImplementedError, match="SSDA"):
         solve(problem, "ssda", steps=2)
+
+
+def test_shims_warn_once_per_process_at_caller(fresh_deprecations):
+    """Sweep loops through legacy shims must not spam: one warning per shim
+    per process, attributed (stacklevel) to the caller's file."""
+    problem = _problem("ridge")
+    cfg = DSBAConfig(problem.spec, 0.3, problem.lam, method="dsba")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(3):
+            legacy_run(cfg, problem.data, problem.w, 4, record_every=4)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert dep[0].filename == __file__
+
+    deprecation.reset()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(3):
+            run_extra(problem.spec, problem.data, problem.w, alpha=0.2,
+                      lam=problem.lam, steps=4)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert dep[0].filename == __file__
