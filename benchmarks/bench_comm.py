@@ -8,9 +8,21 @@ crossover ratios the paper claims.
 Also sweeps ring topologies at N in {8, 16, 32} — the regime where DSA's
 O(N) relay delays and Lan et al.'s communication-complexity analysis bite,
 and where the pre-vectorization per-observer Python loop was intractable.
+
+``sharded_scaling_sweep`` is the ``comm="sharded"`` half (bench-group
+``comm-sharded``): for N in {8, 16, 32, 64} simulated nodes it times the
+single-device dense matmul backend against the node-per-device shard_map
+backend and reports the HLO-measured collective bytes — the matmul-vs-
+ppermute crossover table. Each N runs in a CHILD process because
+``--xla_force_host_platform_device_count`` must be set before jax
+initializes (``--sharded-child`` below).
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -100,7 +112,86 @@ def topology_sweep(sizes=(8, 16, 32), q=10, d=256, k=8, seed=0):
           "when it is below compile-time variance)")
 
 
+def _sharded_child(n: int, q=10, d=64, k=8, steps=60, seed=0) -> None:
+    """Measure one N inside a forced-device process; print a JSON line.
+
+    Warm per-iteration wall time for both backends (second solve() call —
+    the compiled runner is cached), plus the sharded run's HLO-measured
+    collective traffic and the modeled dense exchange for the same graph.
+    """
+    graph = mixing.ring_graph(n)
+    data = make_regression(n, q, d, k=k, seed=seed)
+    problem = make_problem("ridge", data, graph, lam=1e-3)
+    idx = draw_indices(steps, n, q, seed=3)
+
+    def one(comm, alpha):
+        return solve(problem, "dsba", comm=comm, steps=steps,
+                     record_every=steps, indices=idx, alpha=alpha)
+
+    out = {"n": n, "d": d, "steps": steps}
+    for comm in ("dense", "sharded"):
+        one(comm, 0.3)  # compile
+        t0 = time.perf_counter()
+        res = one(comm, 0.31)
+        out[f"{comm}_us_iter"] = (time.perf_counter() - t0) / steps * 1e6
+    cc = res.extras["collectives"]
+    out["bytes_per_iter"] = cc["bytes_per_iter"]
+    out["permutes_per_iter"] = cc["count_per_iter"]
+    out["measured_bytes_total"] = float(
+        np.asarray(res.measured_collective_bytes)[-1]
+    )
+    out["modeled_dense_doubles_iter"] = int(
+        dense_doubles_per_iter(graph, d).max()
+    )
+    print("SHARDED_CHILD " + json.dumps(out))
+
+
+def sharded_scaling_sweep(sizes=(8, 16, 32, 64)) -> list[dict]:
+    """Spawn one forced-device child per N; return the measured records."""
+    records = []
+    for n in sizes:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_comm",
+             "--sharded-child", str(n)],
+            env=env, capture_output=True, text=True, timeout=1800,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"sharded child N={n} failed:\n{proc.stdout}\n{proc.stderr}"
+            )
+        line = [ln for ln in proc.stdout.splitlines()
+                if ln.startswith("SHARDED_CHILD ")][-1]
+        records.append(json.loads(line.split(" ", 1)[1]))
+    return records
+
+
+def print_sharded_table(records) -> None:
+    """The bench-group ``comm-sharded`` headline: matmul vs ppermute."""
+    print("\nsharded-vs-dense scaling (ring, warm us/iter, one node per "
+          "forced host device):")
+    print(f"{'N':>4} {'dense':>9} {'sharded':>9} {'ratio':>7} "
+          f"{'KB/iter':>8} {'permutes':>9}")
+    for r in records:
+        ratio = r["sharded_us_iter"] / r["dense_us_iter"]
+        print(f"{r['n']:>4} {r['dense_us_iter']:>8.0f} "
+              f"{r['sharded_us_iter']:>8.0f} {ratio:>6.1f}x "
+              f"{r['bytes_per_iter'] / 1024:>7.2f} "
+              f"{r['permutes_per_iter']:>9.0f}")
+    print("(dense = one-device matmul mixing; sharded = per-edge "
+          "collective-permute on the node mesh. KB/iter is HLO-measured "
+          "per-device collective traffic, not a model.)")
+
+
 def main():
+    if "--sharded-child" in sys.argv:
+        _sharded_child(int(sys.argv[sys.argv.index("--sharded-child") + 1]))
+        return
     data, graph, steady, res = measure()
     model = sparse_doubles_per_iter(data.n_nodes, data.k, 0)
     dense = dense_doubles_per_iter(graph, data.d)
@@ -133,6 +224,7 @@ def main():
               f"{dd / s:>7.0f}x")
 
     topology_sweep()
+    print_sharded_table(sharded_scaling_sweep())
 
 
 if __name__ == "__main__":

@@ -8,6 +8,12 @@ non-zero if any shared entry's us_per_call regressed by more than
 repo-root ``BENCH_kernels.json``). New entries (no baseline yet) and
 removed entries are reported but never fail the gate — refresh the
 baseline in the same PR that adds or retires a benchmark.
+
+Entries listed under a payload's ``"informational"`` key (union of both
+files) are reported with their ratio but NEVER gated: the mesh-backend
+``comm_sharded_*`` family mixes single-device modeled timings with
+multi-device measured collectives, where a ratio is a property of the
+machine's device simulation, not a regression.
 """
 from __future__ import annotations
 
@@ -17,22 +23,24 @@ import pathlib
 import sys
 
 
-def load(path: str) -> dict[str, float]:
+def load(path: str) -> tuple[dict[str, float], set[str]]:
     payload = json.loads(pathlib.Path(path).read_text())
     if payload.get("schema") != 1:
         raise SystemExit(f"{path}: unknown benchmark schema "
                          f"{payload.get('schema')!r}")
-    return {k: float(v) for k, v in payload["entries"].items()}
+    entries = {k: float(v) for k, v in payload["entries"].items()}
+    return entries, set(payload.get("informational", ()))
 
 
 def compare(base: dict[str, float], new: dict[str, float],
-            max_ratio: float) -> list[str]:
+            max_ratio: float, informational: set[str] = frozenset()) -> list[str]:
     """Entry-by-entry report; returns the list of gate failures.
 
     Only entries present in BOTH payloads are gated. Baseline-missing
     entries print as ``NEW`` (informational) so a PR introducing a
     benchmark — e.g. the ``sweep_*`` family — passes before its baseline
     is committed; entries only in the baseline print as ``REMOVED``.
+    Entries in ``informational`` print as ``INFO`` and never gate.
     """
     failures = []
     fresh = removed = 0
@@ -47,6 +55,10 @@ def compare(base: dict[str, float], new: dict[str, float],
             removed += 1
             continue
         ratio = new[name] / base[name] if base[name] else float("inf")
+        if name in informational:
+            print(f"INFO     {name}: {base[name]:.1f} -> {new[name]:.1f} us "
+                  f"({ratio:.2f}x; informational, never gated)")
+            continue
         status = "FAIL" if ratio > max_ratio else "ok"
         print(f"{status:8} {name}: {base[name]:.1f} -> {new[name]:.1f} us "
               f"({ratio:.2f}x)")
@@ -67,7 +79,9 @@ def main() -> int:
     ap.add_argument("--max-ratio", type=float, default=1.5,
                     help="fail when new/baseline exceeds this (default 1.5)")
     args = ap.parse_args()
-    failures = compare(load(args.baseline), load(args.new), args.max_ratio)
+    base, info_b = load(args.baseline)
+    new, info_n = load(args.new)
+    failures = compare(base, new, args.max_ratio, info_b | info_n)
     if failures:
         print("\nbenchmark regressions:")
         for f in failures:

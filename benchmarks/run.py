@@ -259,15 +259,47 @@ def bench_solvers(rows):
         rows.append((name, us, f"N={n} d={d} steps={nsteps}"))
 
 
+def bench_comm_sharded(rows, fast):
+    """The ``comm="sharded"`` scaling sweep (bench-group ``comm-sharded``).
+
+    One forced-device child process per N (XLA_FLAGS must precede jax
+    import); entries carry warm us/iter for the dense matmul backend and
+    the node-mesh shard_map backend, with HLO-measured collective bytes in
+    the derived column. ALL ``comm_sharded_*`` entries are tagged
+    informational in the JSON payload: they mix single-device modeled
+    timings with multi-device measured ones, so the 1.5x regression gate
+    must not fire across that comparison (benchmarks/compare.py).
+    """
+    from benchmarks import bench_comm as BCm
+
+    sizes = (8, 16) if fast else (8, 16, 32, 64)
+    records = BCm.sharded_scaling_sweep(sizes)
+    BCm.print_sharded_table(records)
+    for r in records:
+        ratio = r["sharded_us_iter"] / r["dense_us_iter"]
+        rows.append((
+            f"comm_sharded_N{r['n']}_dense", r["dense_us_iter"],
+            f"ring d={r['d']} matmul mixing (modeled comm)",
+        ))
+        rows.append((
+            f"comm_sharded_N{r['n']}_sharded", r["sharded_us_iter"],
+            f"{r['bytes_per_iter'] / 1024:.2f}KB/iter "
+            f"{r['permutes_per_iter']:.0f} permutes/iter "
+            f"{ratio:.1f}x dense (measured comm)",
+        ))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument(
-        "--bench-group", choices=("kernels", "sweep", "convergence", "all"),
+        "--bench-group",
+        choices=("kernels", "sweep", "convergence", "comm-sharded", "all"),
         default="all",
         help="kernels = dsba/kernel-fwd+bwd/gossip/sweep timings (what CI "
              "gates); sweep = just the sweep-engine entries; convergence = "
-             "the paper's convergence + communication tables",
+             "the paper's convergence + communication tables; comm-sharded "
+             "= the node-mesh scaling sweep (informational entries)",
     )
     ap.add_argument(
         "--json", default=None, metavar="PATH",
@@ -288,6 +320,8 @@ def main():
         bench_solvers(rows)
         bench_comm_table(rows)
         bench_convergence_tables(rows, args.fast)
+    if args.bench_group in ("comm-sharded", "all"):
+        bench_comm_sharded(rows, args.fast)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
@@ -302,6 +336,12 @@ def main():
             "fast": bool(args.fast),
             "entries": {name: round(us, 1) for name, us, _ in rows},
             "derived": {name: derived for name, _, derived in rows},
+            # mesh-backend entries mix modeled and measured communication;
+            # compare.py reports them but never gates on them
+            "informational": sorted(
+                name for name, _, _ in rows
+                if name.startswith("comm_sharded_")
+            ),
         }
         pathlib.Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
         print(f"wrote {args.json}")

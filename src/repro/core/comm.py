@@ -1,0 +1,174 @@
+"""Pluggable communication primitives: how a solver's mixing step executes.
+
+Every solver in ``core.solvers`` is written against two primitives instead
+of a literal matmul (docs/solvers.md has the authoring contract):
+
+* ``comm.matvec(M, dtype)`` returns ``mix(X)`` computing ``M @ X`` for a
+  graph-supported matrix ``M`` (off-diagonal nonzeros only on edges of the
+  communication graph — W, W~, the Laplacian and I - W all qualify);
+* ``comm.local(x)`` returns the caller's node-block of a leading-N array
+  (the node-local data slice inside the traced step).
+
+``DenseComm`` is the single-device backend: ``mix`` is the matmul itself
+and ``local`` is the identity, so the compiled step is byte-for-byte the
+pre-refactor inlined ``W @ X`` program. ``ShardedComm`` places one graph
+node per device of a ``"node"``-axis mesh (``launch.mesh.make_node_mesh``)
+and executes ``mix`` as real neighbor exchange: the graph's edges are
+greedily edge-colored into matchings and each matching becomes ONE
+``lax.ppermute`` carrying both directions, so a step moves O(deg) blocks
+per node — never O(N) — and the emitted ``collective-permute`` ops are
+measurable from HLO (``launch.hlo_analysis.collective_stats``).
+
+The ``shard_map`` import shim below is the compatibility machinery shared
+with ``core.gossip`` (jax >= 0.5 promotes it out of experimental).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.mixing import Graph
+
+if hasattr(jax, "shard_map"):  # jax >= 0.5
+    shard_map = jax.shard_map
+else:  # jax 0.4.x keeps it under experimental
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+NODE_AXIS = "node"
+
+
+def edge_coloring(edges, n: int) -> list[list[tuple[int, int]]]:
+    """Greedy proper edge coloring: partition ``edges`` into matchings.
+
+    Each color class touches every node at most once, so its edges — both
+    directions — fit in a single ``lax.ppermute`` (whose source/dest lists
+    must each be distinct). Greedy over the sorted edge list uses at most
+    2*maxdeg - 1 colors (Vizing needs maxdeg + 1; the difference is a few
+    extra ppermutes, not correctness) and is deterministic, keeping the
+    compiled HLO stable across processes.
+    """
+    colors: list[list[tuple[int, int]]] = []
+    busy: list[set[int]] = []
+    for i, j in sorted(edges):
+        for c, nodes in enumerate(busy):
+            if i not in nodes and j not in nodes:
+                colors[c].append((i, j))
+                nodes.update((i, j))
+                break
+        else:
+            colors.append([(i, j)])
+            busy.append({i, j})
+    return colors
+
+
+def _check_support(m: np.ndarray, graph: Graph, atol: float = 0.0) -> None:
+    """Reject matrices with off-diagonal mass outside the graph's edges."""
+    mask = np.zeros((graph.n, graph.n), dtype=bool)
+    for i, j in graph.edges:
+        mask[i, j] = mask[j, i] = True
+    np.fill_diagonal(mask, True)
+    bad = np.abs(np.where(mask, 0.0, m))
+    if bad.max(initial=0.0) > atol:
+        i, j = np.unravel_index(int(bad.argmax()), bad.shape)
+        raise ValueError(
+            f"matrix entry ({i}, {j}) = {m[i, j]} is nonzero but ({i}, {j}) "
+            "is not an edge of the communication graph; sharded mixing only "
+            "moves data along edges"
+        )
+
+
+class DenseComm:
+    """Single-device backend: ``mix`` is the matmul, ``local`` the identity."""
+
+    name = "dense"
+
+    def __init__(self, graph: Graph):
+        """Bind the communication graph (unused beyond documentation)."""
+        self.graph = graph
+
+    def matvec(self, m: np.ndarray, dtype) -> Callable[[jax.Array], jax.Array]:
+        """``mix(X) = M @ X`` with ``M`` baked as a device constant."""
+        m_j = jnp.asarray(m, dtype)
+        return lambda x: m_j @ x
+
+    def local(self, x: jax.Array) -> jax.Array:
+        """Identity: the whole array is this (only) caller's block."""
+        return x
+
+
+class ShardedComm:
+    """One graph node per mesh device; ``mix`` is edge-wise ``ppermute``.
+
+    Requires ``mesh`` to carry a ``"node"`` axis of size exactly
+    ``graph.n`` — the mapping of nodes to devices is positional. All
+    methods other than the constructor must run INSIDE a ``shard_map``
+    over that mesh (they read ``lax.axis_index``).
+    """
+
+    name = "sharded"
+    axis = NODE_AXIS
+
+    def __init__(self, graph: Graph, mesh: jax.sharding.Mesh):
+        """Validate the mesh and precompute the edge-coloring schedule."""
+        if self.axis not in mesh.axis_names:
+            raise ValueError(
+                f"sharded comm needs a {self.axis!r} mesh axis; "
+                f"got axes {mesh.axis_names}"
+            )
+        n_devices = mesh.shape[self.axis]
+        if n_devices != graph.n:
+            raise ValueError(
+                f"sharded comm places one graph node per device: graph has "
+                f"{graph.n} nodes but the {self.axis!r} axis has {n_devices} "
+                "devices (run under XLA_FLAGS="
+                "--xla_force_host_platform_device_count=N to simulate)"
+            )
+        self.graph = graph
+        self.mesh = mesh
+        self.colors = edge_coloring(graph.edges, graph.n)
+        # each matching -> one ppermute moving both directions at once
+        self.perms = [
+            [pair for (i, j) in color for pair in ((i, j), (j, i))]
+            for color in self.colors
+        ]
+
+    def matvec(self, m: np.ndarray, dtype) -> Callable[[jax.Array], jax.Array]:
+        """``mix(X) = M @ X`` as diag + one ``ppermute`` per edge color.
+
+        The returned closure maps this device's (1, ...) block: it scales
+        by ``M``'s diagonal, then for every color receives the permuted
+        neighbor blocks and accumulates them weighted by the matching
+        ``M[dest, src]`` entries (rows without an edge of that color
+        receive zeros from ``ppermute`` and carry weight 0).
+        """
+        m = np.asarray(m)
+        _check_support(m, self.graph)
+        diag_j = jnp.asarray(np.diag(m).copy(), dtype)
+        wrecvs = []
+        for color in self.colors:
+            wrecv = np.zeros(self.graph.n, dtype=m.dtype)
+            for i, j in color:
+                wrecv[i] = m[i, j]
+                wrecv[j] = m[j, i]
+            wrecvs.append(jnp.asarray(wrecv, dtype))
+
+        def shaped(w_col, x):
+            return w_col.reshape((-1,) + (1,) * (x.ndim - 1))
+
+        def mix(x):
+            out = shaped(self.local(diag_j), x) * x
+            for perm, wrecv in zip(self.perms, wrecvs):
+                recv = lax.ppermute(x, self.axis, perm)
+                out = out + shaped(self.local(wrecv), x) * recv
+            return out
+
+        return mix
+
+    def local(self, x: jax.Array) -> jax.Array:
+        """This device's node block: row ``axis_index('node')`` of ``x``."""
+        i = lax.axis_index(self.axis)
+        return lax.dynamic_slice_in_dim(x, i, 1, axis=0)

@@ -121,6 +121,8 @@ def dsba_step(
     state: DSBAState,
     i_t: jax.Array,
     mix: jax.Array | None = None,
+    *,
+    mix_pair: tuple[jax.Array, jax.Array] | None = None,
 ) -> DSBAState:
     """One iteration of Algorithm 1 on every node simultaneously.
 
@@ -132,6 +134,12 @@ def dsba_step(
     communication runtime computes this from each node's *reconstructed*
     delayed copies of the other iterates (Section 5.1) instead of the true
     Z — everything else in the update is node-local.
+
+    mix_pair: optional ``(mix_0, mix_t)`` — the t=0 mixing ``W @ Z`` and
+    the t>=1 mixing ``W~ @ (2Z - Z_prev)`` computed by a ``core.comm``
+    backend (``make_step_fn`` supplies these so the same step runs under
+    dense and sharded communication). Mutually exclusive with ``mix``;
+    with neither, the matmuls are inlined from ``w``/``wt``.
     """
     spec, alpha, lam = cfg.spec, cfg.alpha, cfg.lam
     n, q, k = data_idx.shape
@@ -161,8 +169,11 @@ def dsba_step(
 
     # ---- psi (eq. 29 generalized; eq. 31 at t = 0) -------------------------
     scale = (q - 1.0) / q
-    mix_t = wt.astype(dt) @ (2.0 * state.z - state.z_prev) if mix is None else mix
-    mix_0 = w.astype(dt) @ state.z if mix is None else mix
+    if mix_pair is not None:
+        mix_0, mix_t = mix_pair
+    else:
+        mix_t = wt.astype(dt) @ (2.0 * state.z - state.z_prev) if mix is None else mix
+        mix_0 = w.astype(dt) @ state.z if mix is None else mix
     psi_t = mix_t + alpha * lam * state.z
     psi_t = add_sparse(
         psi_t,
@@ -233,7 +244,7 @@ def dsba_step(
     )
 
 
-def make_step_fn(cfg: DSBAConfig, data, w: np.ndarray):
+def make_step_fn(cfg: DSBAConfig, data, w: np.ndarray, comm=None):
     """Device-resident local-update closure: step(state, i_t, mix=None, hp=None).
 
     Bakes the dataset and mixing matrices into device arrays ONCE and returns
@@ -242,6 +253,15 @@ def make_step_fn(cfg: DSBAConfig, data, w: np.ndarray):
     communication engine composes this step with its reconstruction-derived
     mixing rows entirely on device, so per-iteration state never round-trips
     through NumPy.
+
+    comm: optional ``core.comm`` backend. When given, the neighbor-mixing
+    terms run through ``comm.matvec`` (the pluggable mix primitive — a
+    matmul under ``DenseComm``, edge-wise ``ppermute`` under
+    ``ShardedComm``) and the baked dataset arrays are sliced to the
+    caller's node block via ``comm.local`` inside the step, so the same
+    closure runs unchanged under single-device and shard_map execution.
+    ``comm=None`` keeps the legacy inline-matmul behavior (the sparse
+    relay overrides ``mix`` explicitly and needs the full-N arrays).
 
     hp: optional mapping with ``"alpha"`` / ``"lam"`` overriding the values
     baked in ``cfg``. The compiled-runner cache (core.runner_cache) passes
@@ -255,6 +275,9 @@ def make_step_fn(cfg: DSBAConfig, data, w: np.ndarray):
     idx_j = jnp.asarray(data.idx)
     val_j = jnp.asarray(data.val)
     y_j = jnp.asarray(data.y)
+    if comm is not None:
+        w_mix = comm.matvec(w, dt)
+        wt_mix = comm.matvec(w_tilde(w), dt)
 
     def step(
         state: DSBAState,
@@ -265,7 +288,21 @@ def make_step_fn(cfg: DSBAConfig, data, w: np.ndarray):
         c = cfg
         if hp is not None:
             c = dataclasses.replace(cfg, alpha=hp["alpha"], lam=hp["lam"])
-        return dsba_step(c, w_j, wt_j, idx_j, val_j, y_j, state, i_t, mix)
+        if comm is None:
+            return dsba_step(c, w_j, wt_j, idx_j, val_j, y_j, state, i_t, mix)
+        if mix is not None:
+            raise ValueError("pass mix through the comm backend, not both")
+        # eq. 31 at t = 0 mixes with W, eq. 29 with W~ over the
+        # extrapolation — both through the backend's mix primitive
+        mix_pair = (
+            w_mix(state.z),
+            wt_mix(2.0 * state.z - state.z_prev),
+        )
+        return dsba_step(
+            c, w_j, wt_j,
+            comm.local(idx_j), comm.local(val_j), comm.local(y_j),
+            state, i_t, mix_pair=mix_pair,
+        )
 
     return step
 

@@ -49,10 +49,8 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.params import tree_pspecs, tree_sds
 
-if hasattr(jax, "shard_map"):  # jax >= 0.5
-    _shard_map = jax.shard_map
-else:  # jax 0.4.x keeps it under experimental
-    from jax.experimental.shard_map import shard_map as _shard_map
+# version-compat shard_map shim shared with the solver comm backends
+from repro.core.comm import shard_map as _shard_map
 from repro.optim.adam import adam_init, adam_update
 from repro.train.step import TrainConfig, local_grads
 

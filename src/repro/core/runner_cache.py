@@ -101,11 +101,15 @@ class RunnerCache:
             self._stats[k] = 0
 
 
-# The two process-global caches: the dense chunked-scan runners of
-# core.solvers.solve / solve_many, and the sparse relay scans of
-# core.sparse_comm. Module-level so stats survive across solve() calls.
+# The process-global caches: the dense chunked-scan runners of
+# core.solvers.solve / solve_many, the sparse relay scans of
+# core.sparse_comm, and the shard_map runners of the sharded backend.
+# Module-level so stats survive across solve() calls. Separate caches per
+# backend (plus ``mesh_fingerprint`` in the sharded keys) guarantee a
+# cached runner never crosses comm backends or device meshes.
 DENSE = RunnerCache("dense")
 SPARSE = RunnerCache("sparse")
+SHARDED = RunnerCache("sharded")
 
 
 def problem_fingerprint(data, operator_spec, graph, w) -> tuple:
@@ -142,12 +146,28 @@ def array_fingerprint(a) -> tuple:
     )
 
 
+def mesh_fingerprint(mesh) -> tuple:
+    """Content key for a device mesh: axis names/sizes + device ids.
+
+    Part of every sharded runner key: two meshes with the same axes but
+    different device assignments (or sizes) must compile distinct
+    ``shard_map`` programs, and a dense runner (no mesh) can never collide
+    with a sharded one (separate cache AND incompatible key schema).
+    """
+    return (
+        tuple(mesh.axis_names),
+        tuple(mesh.devices.shape),
+        tuple(int(d.id) for d in mesh.devices.flat),
+    )
+
+
 def stats() -> dict[str, dict[str, int]]:
     """{cache name: stats} for every runner cache in the process."""
-    return {c.name: c.stats() for c in (DENSE, SPARSE)}
+    return {c.name: c.stats() for c in (DENSE, SPARSE, SHARDED)}
 
 
 def clear() -> None:
-    """Reset both runner caches (cold-start benchmarks, test isolation)."""
+    """Reset every runner cache (cold-start benchmarks, test isolation)."""
     DENSE.clear()
     SPARSE.clear()
+    SHARDED.clear()

@@ -41,7 +41,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import PartitionSpec as P
+
 from repro.core import reference, runner_cache
+from repro.core.comm import DenseComm, ShardedComm, shard_map as _shard_map
 from repro.core.dsba import (
     DSBAConfig,
     draw_indices,
@@ -57,7 +60,7 @@ from repro.core.runner_cache import (
 from repro.core import sparse_comm as _sparse_comm
 from repro.core.sparse_comm import dense_doubles_per_iter
 
-COMM_BACKENDS = ("dense", "sparse")
+COMM_BACKENDS = ("dense", "sparse", "sharded")
 
 
 # ---------------------------------------------------------------------------
@@ -174,13 +177,18 @@ class SolverSpec:
 
     - ``init(problem, hp, z0) -> state``: initial state pytree from a (N, D)
       starting point (scan-compatible: every leaf is a jax array).
-    - ``step(problem, hp) -> fn(state, i_t, hp) -> state``: the
+    - ``step(problem, hp, comm) -> fn(state, i_t, hp) -> state``: the
       per-iteration transition, safe to call inside jit/lax.scan. ``i_t``
       is the (N,) sample draw of this iteration; deterministic solvers
       ignore it. The inner ``hp`` dict carries every non-static
-      hyperparameter plus ``"lam"`` (unless ``bake_lam``).
-    - ``z_of(problem, hp) -> fn(state, hp) -> (N, D)``: iterate read-out
-      (SSDA's primal read-out is a real computation, hence a factory too).
+      hyperparameter plus ``"lam"`` (unless ``bake_lam``). ``comm`` is the
+      communication backend (``core.comm``): ALL neighbor exchange must go
+      through ``comm.matvec(M, dtype)`` and all reads of node-indexed
+      constants through ``comm.local`` — never an inline ``W @ X`` — so
+      the one step definition runs under dense and sharded execution.
+    - ``z_of(problem, hp, comm) -> fn(state, hp) -> (N, D)``: iterate
+      read-out (SSDA's primal read-out is a real computation, hence a
+      factory too; it receives ``comm`` for the same reason the step does).
     - ``defaults``: the solver's hyperparameters with default values; the
       keys are also the *schema* — ``solve()`` rejects unknown overrides.
     - ``static_hp``: names of hyperparameters that are *structural* (Python
@@ -194,14 +202,21 @@ class SolverSpec:
       ``(problem, hp, steps, indices, z0, options) -> SparseRunResult``.
       ``None`` means the method has no sparse protocol (the deterministic
       baselines exchange dense vectors by construction).
+    - ``sparse_run_many``: optional batched sparse backend with signature
+      ``(problem, merged, steps, idx_b, z0, options) ->
+      list[SparseRunResult] | None`` (``merged``: one resolved hp dict per
+      run; ``idx_b``: (B, >= steps, N) sample streams). Returning ``None``
+      declines the batch (e.g. ``engine="reference"``) and ``solve_many``
+      falls back to sequential warm ``solve()`` calls.
     """
 
     name: str
     init: Callable[[Problem, Mapping[str, float], jax.Array], Any]
-    step: Callable[[Problem, Mapping[str, float]], Callable]
-    z_of: Callable[[Problem, Mapping[str, float]], Callable]
+    step: Callable[[Problem, Mapping[str, float], Any], Callable]
+    z_of: Callable[[Problem, Mapping[str, float], Any], Callable]
     defaults: Mapping[str, float]
     sparse_run: Callable | None = None
+    sparse_run_many: Callable | None = None
     static_hp: tuple[str, ...] = ()
     bake_lam: bool = False
 
@@ -343,9 +358,10 @@ def _get_dense_runner(spec: SolverSpec, problem: Problem, hp: Mapping):
     key, guards = _runner_key(spec, problem, hp)
 
     def build() -> _DenseRunner:
+        comm = DenseComm(problem.graph)
         fhp = _FactoryHP(hp, spec.static_hp)
-        step_fn = spec.step(problem, fhp)
-        z_fn = spec.z_of(problem, fhp)
+        step_fn = spec.step(problem, fhp, comm)
+        z_fn = spec.z_of(problem, fhp, comm)
 
         def run_chunk(state, idx_block, hp_dyn):
             runner_cache.DENSE.note_trace()  # trace-time only
@@ -371,6 +387,122 @@ def _get_dense_runner(spec: SolverSpec, problem: Problem, hp: Mapping):
         )
 
     return runner_cache.DENSE.get_or_build(key, guards, build)
+
+
+@dataclasses.dataclass
+class _ShardedRunner:
+    """One compiled sharded-backend runner: shard_mapped scan + read-out.
+
+    ``chunk``/``z_read`` are jitted ``shard_map`` wrappers over the same
+    chunked scan the dense runner compiles — the solver step itself is
+    shared; only the comm primitive differs. ``measured`` caches the
+    HLO-derived per-iteration collective traffic, keyed by chunk length
+    (each distinct length is its own compiled program).
+    """
+
+    init: Callable  # (z0) -> state, eager (global (N, ...) leaves)
+    chunk: Callable  # jitted shard_map'd (state, idx_block, hp) -> state
+    z_read: Callable  # jitted shard_map'd (state, hp) -> (N, D)
+    mesh: Any
+    measured: dict = dataclasses.field(default_factory=dict)
+
+    def collective_costs(self, state, idx_block, hp_dyn) -> dict:
+        """Per-iteration collective bytes/counts of this chunk's program.
+
+        Lowers and compiles the chunk AOT once per chunk length and parses
+        the optimized HLO (``launch.hlo_analysis``). The duplicate compile
+        is absorbed by jax's persistent compilation cache
+        (``launch.compile_cache``), enabled on ``import repro.core``.
+        """
+        from repro.launch.hlo_analysis import compiled_collective_costs
+
+        length = int(idx_block.shape[0])
+        if length not in self.measured:
+            compiled = self.chunk.lower(state, idx_block, hp_dyn).compile()
+            self.measured[length] = compiled_collective_costs(
+                compiled, iterations=length
+            )
+        return self.measured[length]
+
+
+def _node_partition_specs(state_proto, n: int):
+    """Partition specs for a state pytree: leading-N leaves shard on "node".
+
+    Every registered solver keeps its per-node state with a leading N axis
+    (docs/solvers.md authoring contract); scalars (step counters) are
+    replicated. A leaf that is neither is ambiguous — fail loudly rather
+    than silently replicate what should be distributed.
+    """
+
+    def spec_of(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] == n:
+            return P("node", *([None] * (leaf.ndim - 1)))
+        if leaf.ndim == 0:
+            return P()
+        raise ValueError(
+            f"state leaf with shape {leaf.shape} has no leading node axis "
+            f"(N = {n}) and is not a scalar; the sharded backend cannot "
+            "place it (see docs/solvers.md)"
+        )
+
+    return jax.tree_util.tree_map(spec_of, state_proto)
+
+
+def _get_sharded_runner(
+    spec: SolverSpec, problem: Problem, hp: Mapping, mesh
+):
+    """Fetch (or compile) the shard_map runner for (spec, problem, hp, mesh)."""
+    base_key, guards = _runner_key(spec, problem, hp)
+    key = base_key + (runner_cache.mesh_fingerprint(mesh),)
+
+    def build() -> _ShardedRunner:
+        comm = ShardedComm(problem.graph, mesh)
+        fhp = _FactoryHP(hp, spec.static_hp)
+        step_fn = spec.step(problem, fhp, comm)
+        z_fn = spec.z_of(problem, fhp, comm)
+        n, D = problem.graph.n, problem.dim
+        dt = problem.data.val.dtype
+
+        state_proto = jax.eval_shape(
+            lambda z: spec.init(problem, fhp, z),
+            jax.ShapeDtypeStruct((n, D), dt),
+        )
+        state_specs = _node_partition_specs(state_proto, n)
+        hp_specs = {k: P() for k in _dynamic_hp(spec, problem, hp)}
+
+        def run_chunk(state, idx_block, hp_dyn):
+            runner_cache.SHARDED.note_trace()  # trace-time only
+            st, _ = jax.lax.scan(
+                lambda s, i: (step_fn(s, i, hp_dyn), None), state, idx_block
+            )
+            return st
+
+        def read(state, hp_dyn):
+            runner_cache.SHARDED.note_trace()
+            return z_fn(state, hp_dyn)
+
+        chunk = jax.jit(
+            _shard_map(
+                run_chunk, mesh=mesh,
+                in_specs=(state_specs, P(None, "node"), hp_specs),
+                out_specs=state_specs,
+            )
+        )
+        z_read = jax.jit(
+            _shard_map(
+                read, mesh=mesh,
+                in_specs=(state_specs, hp_specs),
+                out_specs=P("node", None),
+            )
+        )
+        return _ShardedRunner(
+            init=lambda z0: spec.init(problem, fhp, z0),
+            chunk=chunk,
+            z_read=z_read,
+            mesh=mesh,
+        )
+
+    return runner_cache.SHARDED.get_or_build(key, (*guards, mesh), build)
 
 
 def _get_batched_fns(runner: _DenseRunner, dyn_names) -> tuple:
@@ -407,7 +539,13 @@ class SolveResult:
     ``state`` is the solver's final state pytree (``None`` for sparse runs:
     the relay engine returns trajectories, not solver internals);
     ``extras`` carries backend-specific outputs (sparse: ``z_trace``,
-    ``recon_max_err``).
+    ``recon_max_err``; sharded: the per-iteration ``collectives`` detail).
+
+    ``measured_collective_bytes`` is populated by ``comm="sharded"`` only:
+    cumulative bytes per device actually moved through collectives
+    (``collective-permute`` etc.), measured from the compiled program's
+    optimized HLO (``launch.hlo_analysis``) — the *measured* counterpart
+    of the modeled ``doubles_received`` accounting.
     """
 
     method: str
@@ -422,6 +560,7 @@ class SolveResult:
     state: Any  # final solver state pytree (None for sparse runs)
     zs: np.ndarray | None = None  # (R, N, D) snapshots if requested
     extras: dict = dataclasses.field(default_factory=dict)
+    measured_collective_bytes: np.ndarray | None = None  # (R,) per device
 
 
 def _record_points(steps: int, record_every: int) -> list[int]:
@@ -518,9 +657,12 @@ def solve(
     whole grid in one call see ``solve_many``.
 
     method: a registered solver name (``available_solvers()`` lists them).
-    comm: ``"dense"`` (true neighbor exchange, the mixing matmul) or
-        ``"sparse"`` (the paper's delta relay — methods with a sparse
-        backend only; see ``SolverSpec.supports_sparse_comm``).
+    comm: ``"dense"`` (single-device neighbor exchange, the mixing
+        matmul), ``"sparse"`` (the paper's delta relay — methods with a
+        sparse backend only; see ``SolverSpec.supports_sparse_comm``), or
+        ``"sharded"`` (one graph node per device of a ``"node"``-axis
+        mesh; mixing runs as real ``collective-permute`` exchange and the
+        result carries HLO-measured collective bytes).
     steps / record_every: iterations to run / metric recording period (the
         final iteration is always recorded).
     seed: RNG seed for the per-node sample draws when ``indices`` is not
@@ -528,7 +670,9 @@ def solve(
         runs (shared across methods and comm backends).
     z0: (N, D) starting point, default zeros.
     comm_options: backend passthrough for ``comm="sparse"`` (``engine``,
-        ``verify``, ``use_pallas``).
+        ``verify``, ``use_pallas``) and ``comm="sharded"`` (``mesh``, a
+        prebuilt ``"node"``-axis mesh; defaults to
+        ``launch.mesh.make_node_mesh(N)``).
     **hyperparams: solver hyperparameter overrides; the valid keys are the
         solver's ``defaults`` keys (anything else raises ``TypeError``).
     """
@@ -539,8 +683,10 @@ def solve(
         raise ValueError("steps must be >= 1")
     if record_every < 1:
         raise ValueError("record_every must be >= 1")
-    if comm_options and comm != "sparse":
-        raise ValueError("comm_options only apply to comm='sparse'")
+    if comm_options and comm == "dense":
+        raise ValueError(
+            "comm_options only apply to comm='sparse' or comm='sharded'"
+        )
 
     hp = dict(spec.defaults)
     unknown = set(hyperparams) - set(hp)
@@ -597,6 +743,55 @@ def solve(
                 "z_trace": sres.z_trace,
                 "recon_max_err": sres.recon_max_err,
             },
+        )
+
+    if comm == "sharded":
+        # ---- sharded backend: shard_map runner, measured collectives -----
+        opts = dict(comm_options or {})
+        mesh = opts.pop("mesh", None)
+        if opts:
+            raise ValueError(
+                f"unknown sharded comm_options {sorted(opts)}; "
+                "accepts ['mesh']"
+            )
+        t0 = time.perf_counter()
+        if mesh is None:
+            from repro.launch.mesh import make_node_mesh
+
+            mesh = make_node_mesh(n)
+        runner = _get_sharded_runner(spec, problem, hp, mesh)
+        hp_dyn = _dynamic_hp(spec, problem, hp)
+        idx_j = jnp.asarray(indices[:steps], jnp.int32)
+        state = runner.init(jnp.asarray(z0))
+        costs = runner.collective_costs(state, idx_j[: pts[0]], hp_dyn)
+        prev = 0
+        z_final = None
+        for pt in pts:
+            state = runner.chunk(state, idx_j[prev:pt], hp_dyn)
+            prev = pt
+            z_final = runner.z_read(state, hp_dyn)
+            rec.push(pt, z_final)
+        wall = time.perf_counter() - t0
+        iters, dist2, cons, zs = rec.arrays()
+        per_node = dense_doubles_per_iter(problem.graph, D)  # (N,)
+        doubles = iters[:, None] * per_node[None, :]
+        return SolveResult(
+            method=method,
+            comm=comm,
+            iters=iters,
+            dist2=dist2,
+            consensus=cons,
+            doubles_received=doubles,
+            ints_received=np.zeros_like(doubles),
+            wall_time=wall,
+            z=np.asarray(z_final),
+            state=state,
+            zs=zs,
+            extras={
+                "collectives": costs,
+                "mesh_devices": int(mesh.shape["node"]),
+            },
+            measured_collective_bytes=iters * costs["bytes_per_iter"],
         )
 
     # ---- dense backend: cached compiled runner, hp as traced arguments ----
@@ -669,12 +864,16 @@ def solve_many(
     a leading batch axis of the cached compiled runner: one executable,
     one scan, every grid point advancing in lockstep.
 
-    Fallback to the cached *sequential* path (one warm ``solve()`` per
-    entry — still compile-free after the first) happens when the grid is
-    not vmappable:
+    ``comm="sparse"`` batches too: the relay scan is vmapped over (seed,
+    alpha) with the closed-form message accounting applied per run after
+    the scan, bit-identical to sequential calls. Fallback to the cached
+    *sequential* path (one warm ``solve()`` per entry — still compile-free
+    after the first) happens when the grid is not vmappable:
 
-    - ``comm="sparse"`` — the relay scan's message accounting is
-      data-dependent per seed and not batchable;
+    - ``comm="sparse"`` with ``engine="reference"`` (the per-observer
+      oracle loop) or a method without a batched sparse backend;
+    - ``comm="sharded"`` — one mesh program advances one run; sweeps
+      reuse the warm compiled runner sequentially;
     - a grid entry overrides a ``static_hp`` (structural, must recompile).
 
     Returns one ``SolveResult`` whose per-run arrays carry a leading B
@@ -718,6 +917,14 @@ def solve_many(
     idx_b = _sweep_indices(indices, n_runs, steps, n, q, seeds_list)
 
     ragged = any(k in spec.static_hp for e in entries for k in e)
+    if comm == "sparse" and not ragged:
+        res = _solve_many_sparse_batched(
+            problem, method, spec, steps=steps, record_every=record_every,
+            z0=z0, keep_snapshots=keep_snapshots, comm_options=comm_options,
+            merged=merged, entries=entries, seeds=seeds_list, idx_b=idx_b,
+        )
+        if res is not None:
+            return res
     if comm != "dense" or ragged:
         return _solve_many_sequential(
             problem, method, comm, steps=steps, record_every=record_every,
@@ -812,6 +1019,66 @@ def _sweep_indices(indices, n_runs, steps, n, q, seeds_list) -> np.ndarray:
     return indices
 
 
+def _solve_many_sparse_batched(
+    problem, method, spec, *, steps, record_every, z0, keep_snapshots,
+    comm_options, merged, entries, seeds, idx_b,
+) -> SolveResult | None:
+    """One vmapped relay scan for the whole sparse sweep, or None to decline.
+
+    Declines (returns ``None``, sending ``solve_many`` to the sequential
+    fallback) when the method has no batched sparse backend or the backend
+    itself declines — e.g. ``engine="reference"``, the per-observer oracle
+    loop. Results are bit-identical to the sequential path (the relay's
+    message accounting is closed-form over the per-run nnz log, outside
+    the scan).
+    """
+    if not spec.supports_sparse_comm():
+        raise ValueError(
+            f"method {method!r} has no sparse-communication backend"
+        )
+    if spec.sparse_run_many is None:
+        return None
+    if steps < 1:
+        raise ValueError("steps must be >= 1")
+    if record_every < 1:
+        raise ValueError("record_every must be >= 1")
+    t0 = time.perf_counter()
+    sres = spec.sparse_run_many(
+        problem, merged, steps, idx_b, z0, dict(comm_options or {})
+    )
+    if sres is None:
+        return None
+    wall = time.perf_counter() - t0
+    pts = _record_points(steps, record_every)
+    rec = _Recorder(problem.z_star, keep_snapshots)
+    for pt in pts:
+        rec.push(pt, np.stack([r.z_trace[pt] for r in sres]))
+    iters, dist2, cons, zs = rec.arrays()
+    sel = np.asarray(pts) - 1
+    return SolveResult(
+        method=method,
+        comm="sparse",
+        iters=iters,
+        dist2=dist2,
+        consensus=cons,
+        doubles_received=np.stack([r.doubles_received[sel] for r in sres]),
+        ints_received=np.stack([r.ints_received[sel] for r in sres]),
+        wall_time=wall,
+        z=np.stack([r.z_trace[-1] for r in sres]),
+        state=None,
+        zs=zs,
+        extras={
+            "batched": True,
+            "grid": entries,
+            "seeds": seeds,
+            "per_run_extras": [
+                {"z_trace": r.z_trace, "recon_max_err": r.recon_max_err}
+                for r in sres
+            ],
+        },
+    )
+
+
 def _solve_many_sequential(
     problem, method, comm, *, steps, record_every, z0, keep_snapshots,
     comm_options, merged, entries, seeds, idx_b,
@@ -874,10 +1141,15 @@ def _make_dsba_family(method: str, default_alpha: float) -> SolverSpec:
             _dsba_placeholder_cfg(problem, method), problem.data, z0
         )
 
-    def step(problem, hp):
-        """Device-resident Algorithm-1 step via ``dsba.make_step_fn``."""
+    def step(problem, hp, comm):
+        """Device-resident Algorithm-1 step via ``dsba.make_step_fn``.
+
+        The mixing terms route through ``comm.matvec`` and the baked data
+        arrays through ``comm.local`` inside ``make_step_fn``.
+        """
         raw = _dsba_make_step_fn(
-            _dsba_placeholder_cfg(problem, method), problem.data, problem.w
+            _dsba_placeholder_cfg(problem, method), problem.data, problem.w,
+            comm=comm,
         )
 
         def fn(state, i_t, hp_run):
@@ -888,7 +1160,7 @@ def _make_dsba_family(method: str, default_alpha: float) -> SolverSpec:
 
         return fn
 
-    def z_of(problem, hp):
+    def z_of(problem, hp, comm):
         """Iterates live directly on the state."""
         return lambda state, hp_run: state.z
 
@@ -908,6 +1180,26 @@ def _make_dsba_family(method: str, default_alpha: float) -> SolverSpec:
             **options,
         )
 
+    def sparse_run_many(problem, merged, steps, idx_b, z0, options):
+        """Vmapped relay sweep (``run_sparse_many``); declines "reference"."""
+        options = dict(options)
+        if options.pop("engine", "vectorized") != "vectorized":
+            return None  # the oracle loop is per-run by construction
+        return _sparse_comm.run_sparse_many(
+            DSBAConfig(
+                spec=problem.spec, alpha=merged[0]["alpha"],
+                lam=problem.lam, method=method,
+            ),
+            problem.data,
+            problem.graph,
+            problem.w,
+            steps,
+            idx_b,
+            [hp["alpha"] for hp in merged],
+            z0=z0,
+            **options,
+        )
+
     return SolverSpec(
         name=method,
         init=init,
@@ -915,6 +1207,7 @@ def _make_dsba_family(method: str, default_alpha: float) -> SolverSpec:
         z_of=z_of,
         defaults={"alpha": default_alpha},
         sparse_run=sparse_run,
+        sparse_run_many=sparse_run_many,
     )
 
 
@@ -927,21 +1220,26 @@ register_solver(_make_dsba_family("dsa", default_alpha=0.2))
 # ---------------------------------------------------------------------------
 
 
-def _full_operator(spec: OperatorSpec, feats, labels):
+def _full_operator(spec: OperatorSpec, feats, labels, comm):
     """G(Z, lam): (N, D) -> (N, D), full local operator incl. regularizer.
 
     ``lam`` is a call-time argument (traced in the compiled runners), not a
     baked constant — a regularization-path sweep reuses one executable.
+    The node-indexed data constants are read through ``comm.local`` at
+    trace time, so under the sharded backend each device computes only its
+    own node's operator (the whole map is node-local — no communication).
     """
     t = spec.tail_dim
     d = feats.shape[-1]
 
     def G(Z, lam):
+        fe = comm.local(feats)
+        la = comm.local(labels)
         head, tail = Z[:, :d], Z[:, d:]
-        u = jnp.einsum("nqd,nd->nq", feats, head)
+        u = jnp.einsum("nqd,nd->nq", fe, head)
         tails = jnp.broadcast_to(tail[:, None, :], u.shape + (t,))
-        g, tail_out = spec.coeff_and_tail(u, labels, tails)
-        out_head = jnp.einsum("nq,nqd->nd", g, feats) / feats.shape[1]
+        g, tail_out = spec.coeff_and_tail(u, la, tails)
+        out_head = jnp.einsum("nq,nqd->nd", g, fe) / fe.shape[1]
         if t:
             out = jnp.concatenate([out_head, tail_out.mean(1)], axis=1)
         else:
@@ -964,13 +1262,13 @@ def _extra_init(problem, hp, z0):
     return (z0, zeros, zeros, jnp.zeros((), jnp.int32))
 
 
-def _extra_step(problem, hp):
+def _extra_step(problem, hp, comm):
     """EXTRA (Shi et al. 2015a), eq. (47) form with first-step special case."""
     feats, labels = _dense_setup(problem)
-    G = _full_operator(problem.spec, feats, labels)
+    G = _full_operator(problem.spec, feats, labels, comm)
     dt = feats.dtype
-    wj = jnp.asarray(problem.w, dt)
-    wtj = jnp.asarray(w_tilde(problem.w), dt)
+    w_mix = comm.matvec(problem.w, dt)
+    wt_mix = comm.matvec(w_tilde(problem.w), dt)
 
     def step(carry, i_t, hp_run):
         alpha, lam = hp_run["alpha"], hp_run["lam"]
@@ -978,8 +1276,8 @@ def _extra_step(problem, hp):
         g = G(z, lam)
         z1 = jnp.where(
             t == 0,
-            wj @ z - alpha * g,
-            z + wj @ z - wtj @ z_prev - alpha * (g - g_prev),
+            w_mix(z) - alpha * g,
+            z + w_mix(z) - wt_mix(z_prev) - alpha * (g - g_prev),
         )
         return (z1, z, g, t + 1)
 
@@ -991,20 +1289,21 @@ def _dlm_init(problem, hp, z0):
     return (z0, jnp.zeros_like(z0))
 
 
-def _dlm_step(problem, hp):
+def _dlm_step(problem, hp, comm):
     """DLM (Ling et al. 2015): linearized decentralized ADMM."""
     feats, labels = _dense_setup(problem)
-    G = _full_operator(problem.spec, feats, labels)
+    G = _full_operator(problem.spec, feats, labels, comm)
     dt = feats.dtype
-    lap = jnp.asarray(problem.graph.laplacian, dt)
+    lap_mix = comm.matvec(problem.graph.laplacian, dt)
     deg = jnp.asarray(problem.graph.degrees, dt)[:, None]
 
     def step(carry, i_t, hp_run):
         c, beta, lam = hp_run["c"], hp_run["beta"], hp_run["lam"]
         z, lam_dual = carry
-        grad_aug = G(z, lam) + lam_dual + 2.0 * c * (lap @ z)
-        z1 = z - grad_aug / (2.0 * c * deg + beta)
-        lam1 = lam_dual + c * (lap @ z1)
+        deg_l = comm.local(deg)
+        grad_aug = G(z, lam) + lam_dual + 2.0 * c * lap_mix(z)
+        z1 = z - grad_aug / (2.0 * c * deg_l + beta)
+        lam1 = lam_dual + c * lap_mix(z1)
         return (z1, lam1)
 
     return step
@@ -1037,7 +1336,13 @@ def _ssda_conj_grad(problem: Problem, inner_newton: int):
 
 
 def _build_ssda_conj_grad(problem: Problem, inner_newton: int):
-    """Construct the grad f*_n closure (the cached work behind the cache)."""
+    """Construct the grad f*_n closure (the cached work behind the cache).
+
+    The returned ``conj_grad(S, local)`` reads its baked per-node constants
+    (Cholesky factors / features) through ``local`` — the comm backend's
+    node-block view — so one cached closure serves both the dense runner
+    (identity) and the sharded runner (this device's rows).
+    """
     spec, lam = problem.spec, problem.lam
     if spec.tail_dim:
         raise NotImplementedError(
@@ -1055,14 +1360,14 @@ def _build_ssda_conj_grad(problem: Problem, inner_newton: int):
         rhs0 = jnp.einsum("nqd,nq->nd", feats, labels) / q
         chol = jax.vmap(jnp.linalg.cholesky)(gram)
 
-        def conj_grad(S):  # (N, d) -> (N, d): x_n = grad f*_n(s_n)
+        def conj_grad(S, local):  # (N, d) -> (N, d): x_n = grad f*_n(s_n)
             return jax.vmap(
                 lambda L, r: jax.scipy.linalg.cho_solve((L, True), r)
-            )(chol, S + rhs0)
+            )(local(chol), S + local(rhs0))
 
     else:
 
-        def conj_grad(S):
+        def conj_grad(S, local):
             # invert grad f_n via damped Newton with explicit per-node jacobians
             def one(fe, la, s):
                 def gn(x):
@@ -1076,7 +1381,7 @@ def _build_ssda_conj_grad(problem: Problem, inner_newton: int):
                     x = x - jnp.linalg.solve(jac(x), gn(x) - s)
                 return x
 
-            return jax.vmap(one)(feats, labels, S)
+            return jax.vmap(one)(local(feats), local(labels), S)
 
     return conj_grad
 
@@ -1089,31 +1394,31 @@ def _ssda_init(problem, hp, z0):
     return (zeros, zeros)
 
 
-def _ssda_step(problem, hp):
+def _ssda_step(problem, hp, comm):
     """SSDA (Scaman et al. 2017): accelerated gradient ascent on the dual."""
     conj_grad = _ssda_conj_grad(problem, int(hp["inner_newton"]))
     n = problem.data.n_nodes
     dt = jnp.asarray(problem.data.val).dtype
-    i_minus_w = jnp.eye(n, dtype=dt) - jnp.asarray(problem.w, dt)
+    imw_mix = comm.matvec(np.eye(n) - np.asarray(problem.w), dt)
 
     def step(carry, i_t, hp_run):
         eta, momentum = hp_run["eta"], hp_run["momentum"]
         m, m_prev = carry
         v = m + momentum * (m - m_prev)
-        x = conj_grad(-v)  # primal read-out: grad f*(-(U Lambda)_n)
-        m1 = v + eta * (i_minus_w @ x)
+        x = conj_grad(-v, comm.local)  # primal: grad f*(-(U Lambda)_n)
+        m1 = v + eta * imw_mix(x)
         return (m1, m)
 
     return step
 
 
-def _ssda_z_of(problem, hp):
+def _ssda_z_of(problem, hp, comm):
     """Primal read-out grad f*(-m): a real computation, not a field access.
 
     Jitted by the runner cache alongside the step — no inner jit here.
     """
     conj_grad = _ssda_conj_grad(problem, int(hp["inner_newton"]))
-    return lambda state, hp_run: conj_grad(-state[0])
+    return lambda state, hp_run: conj_grad(-state[0], comm.local)
 
 
 register_solver(
@@ -1121,7 +1426,7 @@ register_solver(
         name="extra",
         init=_extra_init,
         step=_extra_step,
-        z_of=lambda problem, hp: lambda state, hp_run: state[0],
+        z_of=lambda problem, hp, comm: lambda state, hp_run: state[0],
         defaults={"alpha": 0.3},
     )
 )
@@ -1130,7 +1435,7 @@ register_solver(
         name="dlm",
         init=_dlm_init,
         step=_dlm_step,
-        z_of=lambda problem, hp: lambda state, hp_run: state[0],
+        z_of=lambda problem, hp, comm: lambda state, hp_run: state[0],
         defaults={"c": 0.3, "beta": 1.0},
     )
 )

@@ -403,6 +403,42 @@ def _build_sparse_scan(cfg, data, graph, w, *, verify, kernel_mode):
     return jax.jit(scan_all), tb
 
 
+def _relay_carry0(cfg, data, z0, depth, verify):
+    """The relay scan's initial carry at the shared starting point ``z0``."""
+    n = data.n_nodes
+    D = data.d + cfg.spec.tail_dim
+    dt = data.val.dtype
+    state0 = init_state(cfg, data, jnp.asarray(z0))
+    R0 = jnp.zeros((depth, n, n, D), dt)
+    R0 = R0.at[0].set(jnp.broadcast_to(jnp.asarray(z0, dt), (n, n, D)))
+    DD0 = jnp.zeros((depth, n, D), dt)
+    if verify:
+        SR0 = jnp.full((depth, n, n), -(2**30), jnp.int32).at[0].set(0)
+        Z0 = jnp.zeros((depth, n, D), dt).at[0].set(jnp.asarray(z0, dt))
+    else:  # zero-size placeholders keep the carry structure uniform
+        SR0 = jnp.zeros((0,), jnp.int32)
+        Z0 = jnp.zeros((0,), dt)
+    return (
+        state0,
+        jnp.zeros((n, D), dt),  # z^1, captured at t == 1
+        R0,
+        DD0,
+        SR0,
+        Z0,
+        jnp.zeros((), dt),
+        jnp.ones((), bool),
+    )
+
+
+def _resolve_kernel_mode(use_pallas: str) -> str:
+    """Resolve the relay's ``use_pallas`` option to a concrete kernel mode."""
+    if use_pallas not in ("auto", "on", "interpret", "off"):
+        raise ValueError(f"unknown use_pallas mode {use_pallas!r}")
+    if use_pallas == "auto":
+        return "on" if jax.default_backend() == "tpu" else "interpret"
+    return use_pallas
+
+
 def _run_vectorized(
     cfg, data, graph, w, steps, indices, z0, *, verify, use_pallas
 ) -> SparseRunResult:
@@ -414,15 +450,11 @@ def _run_vectorized(
     if z0 is None:
         z0 = np.zeros((n, D), dtype=dt)
 
-    if use_pallas not in ("auto", "on", "interpret", "off"):
-        raise ValueError(f"unknown use_pallas mode {use_pallas!r}")
     # This path follows the protocol spec rather than kernels.ops "auto"
     # (which falls back to the jnp oracle off-TPU): the relay's delta
     # densification stays on the Pallas kernel everywhere, interpret=True
     # being the CPU fallback. Resolve "auto" here, dispatch through ops.
-    kernel_mode = use_pallas
-    if kernel_mode == "auto":
-        kernel_mode = "on" if jax.default_backend() == "tpu" else "interpret"
+    kernel_mode = _resolve_kernel_mode(use_pallas)
 
     key, guards = _sparse_scan_key(cfg, data, graph, w, verify, kernel_mode)
     scan, tb = runner_cache.SPARSE.get_or_build(
@@ -433,26 +465,7 @@ def _run_vectorized(
     )
     depth, dmax = tb.depth, tb.dmax
 
-    state0 = init_state(cfg, data, jnp.asarray(z0))
-    R0 = jnp.zeros((depth, n, n, D), dt)
-    R0 = R0.at[0].set(jnp.broadcast_to(jnp.asarray(z0, dt), (n, n, D)))
-    DD0 = jnp.zeros((depth, n, D), dt)
-    if verify:
-        SR0 = jnp.full((depth, n, n), -(2**30), jnp.int32).at[0].set(0)
-        Z0 = jnp.zeros((depth, n, D), dt).at[0].set(jnp.asarray(z0, dt))
-    else:  # zero-size placeholders keep the carry structure uniform
-        SR0 = jnp.zeros((0,), jnp.int32)
-        Z0 = jnp.zeros((0,), dt)
-    carry0 = (
-        state0,
-        jnp.zeros((n, D), dt),  # z^1, captured at t == 1
-        R0,
-        DD0,
-        SR0,
-        Z0,
-        jnp.zeros((), dt),
-        jnp.ones((), bool),
-    )
+    carry0 = _relay_carry0(cfg, data, z0, depth, verify)
     ts = jnp.arange(steps, dtype=jnp.int32)
     idx_j = jnp.asarray(indices[:steps], jnp.int32)
     mix0 = jnp.asarray(w @ z0, dt)  # t=0 mixing: z^0 is consensus-shared
@@ -476,6 +489,101 @@ def _run_vectorized(
         ints_received=ints,
         recon_max_err=float(err) if verify else float("nan"),
     )
+
+
+def run_sparse_many(
+    cfg: DSBAConfig,
+    data,
+    graph: Graph,
+    w: np.ndarray,
+    steps: int,
+    indices: np.ndarray,
+    alphas,
+    z0: np.ndarray | None = None,
+    *,
+    verify: bool = False,
+    use_pallas: str = "auto",
+) -> list[SparseRunResult]:
+    """Run B relay sweeps as ONE vmapped scan: per-run seeds and alphas.
+
+    ``indices`` is (B, >= steps, N) — one sample stream per run — and
+    ``alphas`` a length-B sequence of step sizes (``cfg.alpha`` is ignored;
+    ``cfg.lam``/``cfg.method`` are shared). The compiled relay scan is the
+    SAME cached executable family as ``run_sparse``'s (hp values are traced
+    arguments), wrapped in ``jax.vmap`` over (carry, indices, alpha) and
+    re-jitted once per batch size. The per-run message accounting is
+    already hoisted out of the scan (closed form over the nnz log), so
+    batching adds no accounting approximation — results are bit-identical
+    to B sequential ``run_sparse`` calls (pinned in tests/test_solvers.py).
+
+    The starting point ``z0`` is shared across runs (it is consensus
+    state, not a sweep axis). Returns one SparseRunResult per run.
+    """
+    spec = cfg.spec
+    n = data.n_nodes
+    tail = spec.tail_dim
+    D = data.d + tail
+    dt = data.val.dtype
+    if z0 is None:
+        z0 = np.zeros((n, D), dtype=dt)
+    indices = np.asarray(indices)
+    B = len(alphas)
+    if indices.ndim != 3 or indices.shape[0] != B or indices.shape[1] < steps:
+        raise ValueError(
+            f"indices must be (B, >= steps, N) = ({B}, >={steps}, {n}), "
+            f"got {indices.shape}"
+        )
+    kernel_mode = _resolve_kernel_mode(use_pallas)
+
+    key, guards = _sparse_scan_key(cfg, data, graph, w, verify, kernel_mode)
+    scan, tb = runner_cache.SPARSE.get_or_build(
+        key, guards,
+        lambda: _build_sparse_scan(
+            cfg, data, graph, w, verify=verify, kernel_mode=kernel_mode
+        ),
+    )
+    # The batched variant lives in the same cache under a derived key, so
+    # it shares the LRU/stats machinery and is evicted with its parent.
+    scan_b = runner_cache.SPARSE.get_or_build(
+        ("batched", key), guards,
+        lambda: jax.jit(jax.vmap(
+            scan, in_axes=(0, (None, 0), None, {"alpha": 0, "lam": None})
+        )),
+    )
+
+    carry0 = _relay_carry0(cfg, data, z0, tb.depth, verify)
+    carry0_b = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (B,) + x.shape), carry0
+    )
+    ts = jnp.arange(steps, dtype=jnp.int32)
+    idx_j = jnp.asarray(indices[:, :steps], jnp.int32)
+    mix0 = jnp.asarray(w @ z0, dt)  # t=0 mixing: z^0 is consensus-shared
+    # alphas in the DATA dtype: batched arithmetic then promotes exactly
+    # like the sequential path's weak-typed python-float scalar
+    hp = {"alpha": jnp.asarray(np.asarray(alphas, dtype=dt)),
+          "lam": float(cfg.lam)}
+
+    (_, _, _, _, _, _, err, ok), (zs, nnzs) = scan_b(
+        carry0_b, (ts, idx_j), mix0, hp
+    )
+
+    if verify and not np.all(np.asarray(ok)):
+        raise ProtocolViolation(
+            "relay schedule consumed a value before its arrival"
+        )
+    zs = np.asarray(zs)
+    nnzs = np.asarray(nnzs)
+    err = np.asarray(err)
+    out = []
+    for b in range(B):
+        doubles, ints = _closed_form_costs(nnzs[b], tb.dist, tail, D)
+        out.append(SparseRunResult(
+            z_trace=np.concatenate([np.asarray(z0)[None], zs[b]]),
+            doubles_received=doubles,
+            ints_received=ints,
+            recon_max_err=float(err[b]) if verify else float("nan"),
+        ))
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,79 @@
+"""Persistent XLA compilation cache: sweeps pay for each compile once, ever.
+
+The runner caches in ``core.runner_cache`` already amortize compilation
+*within* a process, but every fresh process (a new benchmark run, a pytest
+tier, a CI job) still recompiles every chunked scan from scratch — and on
+CPU those compiles dominate small-problem wall time. JAX ships a
+content-addressed on-disk cache (``jax_compilation_cache_dir``) that
+serializes compiled executables keyed by HLO + compile options + backend;
+this module turns it on with repo-appropriate defaults.
+
+``enable_persistent_cache()`` is called from ``repro.core.__init__`` so
+every entrypoint (tests, benchmarks, notebooks) gets it without
+ceremony. Policy:
+
+* Default location is ``<repo root>/.jax_compile_cache`` (git-ignored)
+  when the source tree is recognizable, else ``~/.cache/repro_jax``.
+* ``REPRO_COMPILE_CACHE_DIR`` overrides the location.
+* ``REPRO_NO_COMPILE_CACHE`` (any non-empty value) disables the cache —
+  the escape hatch for cold-start benchmarks and cache-behavior tests.
+* Thresholds are zeroed (``min_compile_time_secs``/``min_entry_size``)
+  because this repo's compiles are many-small: the default 1 s floor
+  would exclude nearly everything we want cached.
+
+Enabling is idempotent and silent; it never raises (an unwritable cache
+dir degrades to a warning from XLA at worst, not a crash).
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+_ENABLED: str | None = None  # cache dir once enabled, for introspection
+
+
+def default_cache_dir() -> Path:
+    """Repo-local ``.jax_compile_cache`` if we can find the repo root.
+
+    Walks up from this file looking for ``pyproject.toml``; falls back to
+    ``~/.cache/repro_jax`` for installed-package deployments.
+    """
+    here = Path(__file__).resolve()
+    for parent in here.parents:
+        if (parent / "pyproject.toml").exists():
+            return parent / ".jax_compile_cache"
+    return Path.home() / ".cache" / "repro_jax"
+
+
+def enable_persistent_cache() -> str | None:
+    """Point JAX at the on-disk compilation cache. Returns the dir, or None.
+
+    Safe to call any number of times and before/after the first JAX
+    computation (config updates apply to subsequent compiles). Honors
+    ``REPRO_NO_COMPILE_CACHE`` / ``REPRO_COMPILE_CACHE_DIR``.
+    """
+    global _ENABLED
+    if os.environ.get("REPRO_NO_COMPILE_CACHE"):
+        return None
+    if _ENABLED is not None:
+        return _ENABLED
+    cache_dir = os.environ.get("REPRO_COMPILE_CACHE_DIR") or str(
+        default_cache_dir()
+    )
+    try:
+        import jax
+
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        # This repo compiles many small programs; the stock 1 s /
+        # non-zero-size floors would skip nearly all of them.
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    except Exception:  # pragma: no cover - never block import on cache setup
+        return None
+    _ENABLED = cache_dir
+    return cache_dir
+
+
+def enabled_dir() -> str | None:
+    """The active cache directory, or None if disabled/not yet enabled."""
+    return _ENABLED

@@ -287,6 +287,30 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
     return CollectiveStats(dict(pc.coll_bytes_by_op), dict(pc.coll_count_by_op))
 
 
+def compiled_collective_costs(compiled, iterations: int = 1) -> dict:
+    """Per-iteration collective traffic MEASURED from a compiled executable.
+
+    Parses the optimized (post-SPMD-partitioning) HLO of ``compiled`` —
+    e.g. a ``jit(shard_map(...)).lower(...).compile()`` of one sharded
+    solver chunk — and divides the trip-count-weighted collective bytes by
+    ``iterations`` (the scan length the program executes). All figures are
+    PER DEVICE: a ``collective-permute`` is charged its operand bytes on
+    each sender, matching the per-node accounting convention of the
+    modeled ``doubles_received`` columns.
+
+    Returns ``{"bytes_per_iter", "count_per_iter", "bytes_by_op",
+    "count_by_op"}`` (the by-op dicts are also per iteration).
+    """
+    stats = collective_stats(compiled.as_text())
+    it = max(int(iterations), 1)
+    return {
+        "bytes_per_iter": stats.total_bytes / it,
+        "count_per_iter": float(sum(stats.count_by_op.values())) / it,
+        "bytes_by_op": {k: v / it for k, v in stats.bytes_by_op.items()},
+        "count_by_op": {k: v / it for k, v in stats.count_by_op.items()},
+    }
+
+
 @dataclasses.dataclass
 class Roofline:
     """All terms are SECONDS for one step of the lowered program."""

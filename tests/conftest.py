@@ -1,5 +1,45 @@
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
 import jax
 
 # Convex-optimization tests need f64 to verify linear convergence to 1e-10+.
 # Model/kernel tests run in f32/bf16 explicitly.
 jax.config.update("jax_enable_x64", True)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture
+def forced_devices_pytest():
+    """Run a pytest target in a subprocess with N forced host devices.
+
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` only takes
+    effect before jax initializes, which this (already-initialized)
+    process cannot retrofit — so multi-device tiers (tests/multidevice/)
+    run in a fresh interpreter. The child inherits the persistent compile
+    cache, keeping repeat runs cheap.
+    """
+
+    def run(target, n_devices=8, extra_env=None, timeout=1200):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n_devices}"
+        ).strip()
+        env["PYTHONPATH"] = (
+            str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+        )
+        env.update(extra_env or {})
+        return subprocess.run(
+            [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+             str(target)],
+            cwd=REPO, env=env, capture_output=True, text=True,
+            timeout=timeout,
+        )
+
+    return run

@@ -52,6 +52,36 @@ def test_main_exit_codes(tmp_path, monkeypatch, capsys):
     capsys.readouterr()
 
 
+def test_informational_entries_never_gate(capsys):
+    """The mesh-backend family: reported with a ratio, never a failure."""
+    base = {"comm_sharded_N8_sharded": 100.0, "hot": 100.0}
+    new = {"comm_sharded_N8_sharded": 900.0, "hot": 100.0}
+    failures = C.compare(base, new, 1.5,
+                         informational={"comm_sharded_N8_sharded"})
+    assert failures == []
+    out = capsys.readouterr().out
+    assert "INFO     comm_sharded_N8_sharded" in out
+    assert "never gated" in out
+
+
+def test_main_unions_informational_from_both_payloads(tmp_path, monkeypatch,
+                                                      capsys):
+    """A baseline written before the tagging existed still never gates the
+    family, because the NEW payload's list is honored too."""
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({
+        "schema": 1, "entries": {"comm_sharded_N8_sharded": 100.0},
+    }))
+    new = tmp_path / "new.json"
+    new.write_text(json.dumps({
+        "schema": 1, "entries": {"comm_sharded_N8_sharded": 900.0},
+        "informational": ["comm_sharded_N8_sharded"],
+    }))
+    monkeypatch.setattr("sys.argv", ["compare", str(base), str(new)])
+    assert C.main() == 0
+    capsys.readouterr()
+
+
 def test_unknown_schema_rejected(tmp_path):
     p = tmp_path / "x.json"
     p.write_text(json.dumps({"schema": 99, "entries": {}}))

@@ -10,9 +10,10 @@ Three claims (ISSUE 5 / docs/solvers.md):
    asserted via the cache's trace counter, which is incremented from
    *inside* the traced function (counts XLA traces, not calls).
 3. Correctness — warm-cache results are bit-equal to a cold call, and the
-   vmapped ``solve_many`` grid is trace-identical to sequential ``solve()``
-   calls (with the documented sequential fallback for ``comm="sparse"``
-   and for grids that vary a static hyperparameter).
+   vmapped ``solve_many`` grid — dense AND sparse — is bit-identical to
+   sequential ``solve()`` calls (with the documented sequential fallback
+   for ``engine="reference"`` and for grids that vary a static
+   hyperparameter).
 """
 import numpy as np
 import pytest
@@ -217,18 +218,38 @@ def test_solve_many_seed_axis_matches_sequential():
         assert np.array_equal(many.z[b], seq.z)
 
 
-def test_solve_many_sparse_falls_back_sequential():
+def test_solve_many_sparse_batched_matches_sequential_bit_equal():
+    """The vmapped relay sweep is bit-identical to sequential solve()s,
+    including the closed-form message accounting (hoisted out of the scan,
+    so batching cannot perturb it)."""
     problem = _problem()
     grid = [{"alpha": 0.3}, {"alpha": 0.6}]
+    seeds = [3, 4]
     many = solve_many(problem, "dsba", comm="sparse", steps=STEPS,
-                      record_every=REC, grid=grid)
-    assert many.extras["batched"] is False
+                      record_every=REC, grid=grid, seeds=seeds)
+    assert many.extras["batched"] is True
     assert many.doubles_received.shape[0] == 2
     for b, hp in enumerate(grid):
         seq = solve(problem, "dsba", comm="sparse", steps=STEPS,
-                    record_every=REC, **hp)
+                    record_every=REC, seed=seeds[b], **hp)
         assert np.array_equal(many.z[b], seq.z)
         assert np.array_equal(many.doubles_received[b], seq.doubles_received)
+        assert np.array_equal(many.ints_received[b], seq.ints_received)
+        assert np.array_equal(
+            many.extras["per_run_extras"][b]["z_trace"],
+            seq.extras["z_trace"],
+        )
+
+
+def test_solve_many_sparse_reference_engine_falls_back_sequential():
+    """The per-observer oracle loop is not vmappable: engine="reference"
+    declines the batch and runs the documented sequential path."""
+    problem = _problem()
+    many = solve_many(problem, "dsba", comm="sparse", steps=STEPS,
+                      record_every=REC, grid=[{"alpha": 0.3}, {"alpha": 0.6}],
+                      comm_options={"engine": "reference"})
+    assert many.extras["batched"] is False
+    assert many.z.shape[0] == 2
 
 
 def test_solve_many_static_hp_grid_falls_back_sequential():
