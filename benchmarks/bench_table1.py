@@ -47,7 +47,7 @@ def main():
     t_start = time.perf_counter()
 
     print(f"{'lam':>8} {'~kappa':>8} {'DSBA iters':>11} {'DSA iters':>10} "
-          f"{'EXTRA iters':>12}")
+          f"{'EXTRA iters':>12} {'MUDAG iters':>12} {'SLIDING iters':>14}")
     rows = []
     for lam in (1e-1, 1e-2, 1e-3):
         kappa = (0.25 + lam) / lam  # L ~ max eig of per-sample op ~ ||a||^2
@@ -62,9 +62,18 @@ def main():
         r_e = solve(problem, "extra", steps=MAX_PASSES * 4, record_every=4,
                     alpha=0.3)
         it_e = iters_to_eps(r_e.dist2, 4)
+        # Table 1's accelerated row (Ye et al. 2020): sqrt(kappa) iteration
+        # growth; each iteration costs 2K gossip rounds (comm_rounds hook)
+        r_m = solve(problem, "mudag", steps=MAX_PASSES * 4, record_every=4,
+                    eta=2.0, momentum=0.9, gossip_rounds=3)
+        it_m = iters_to_eps(r_m.dist2, 4)
+        # sliding communicates every 4th iteration only
+        r_s = solve(problem, "sliding", steps=MAX_PASSES * 4, record_every=4,
+                    alpha=0.5, comm_period=4)
+        it_s = iters_to_eps(r_s.dist2, 4)
         fmt = lambda v: f"{v}" if v else f">{MAX_PASSES * q}"
         print(f"{lam:8.0e} {kappa:8.0f} {fmt(it_b):>11} {fmt(it_a):>10} "
-              f"{fmt(it_e):>12}")
+              f"{fmt(it_e):>12} {fmt(it_m):>12} {fmt(it_s):>14}")
         rows.append((lam, kappa, it_b, it_a, it_e))
 
     # DSBA's iteration growth must be the flattest in kappa
@@ -73,6 +82,22 @@ def main():
     g_a = grow((rows[0][3], rows[-1][3]))
     print(f"\niteration growth x{g_b:.1f} (DSBA) vs x{g_a:.1f} (DSA) over a "
           f"{rows[-1][1] / rows[0][1]:.0f}x kappa increase")
+
+    # ---- the saddle families (PR 7): iterations to eps on bilinear ------
+    # the same table for the minimax family: the scalar-table methods
+    # (dsba/dsa) against the variance-reduced descent-ascent (dsgda)
+    print(f"\nbilinear minimax (lam=1e-2): "
+          f"{'DSBA iters':>11} {'DSA iters':>10} {'DSGDA iters':>12}")
+    bproblem = make_problem("bilinear", data, graph, lam=1e-2)
+    bproblem.solve_star()
+    its = []
+    for method, hp in (("dsba", dict(alpha=1.0)), ("dsa", dict(alpha=0.15)),
+                       ("dsgda", dict(alpha=0.3, eta=0.3))):
+        r = solve(bproblem, method, steps=MAX_PASSES * q, record_every=q,
+                  **hp)
+        its.append(iters_to_eps(r.dist2, q))
+    fmt = lambda v: f"{v}" if v else f">{MAX_PASSES * q}"
+    print(f"{'':27}{fmt(its[0]):>11} {fmt(its[1]):>10} {fmt(its[2]):>12}")
 
     stats = runner_cache_stats()["dense"]
     print(f"wall {time.perf_counter() - t_start:.1f}s; runner cache "

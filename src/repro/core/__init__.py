@@ -19,8 +19,8 @@ from repro.core.dsba import (  # noqa: F401,E402
     DSBAConfig, DSBAState, dsba_step, init_state,
 )
 from repro.core.solvers import (  # noqa: F401,E402
-    Problem, SolveResult, SolverSpec, available_solvers,
-    clear_runner_caches, get_solver, make_problem, register_solver,
-    runner_cache_stats, solve, solve_many,
+    CapabilityError, Problem, SolveResult, SolverCapabilities, SolverSpec,
+    available_solvers, clear_runner_caches, get_solver, make_problem,
+    register_solver, runner_cache_stats, solve, solve_many,
 )
 from repro.core import mixing, baselines, reference, solvers  # noqa: F401,E402

@@ -33,7 +33,8 @@ def _deprecated(name: str, method: str) -> None:
     # (this helper) -> the run_* shim -> the user's call site.
     warn_once(
         f"baselines.{name}",
-        f"core.baselines.{name} is deprecated; use core.solvers.solve("
+        f"core.baselines.{name} is deprecated and will be REMOVED in v0.2 "
+        f"(final warning); use core.solvers.solve("
         f"problem, method={method!r}, comm='dense') instead",
         stacklevel=3,
     )

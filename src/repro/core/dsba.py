@@ -353,7 +353,8 @@ def run(
 
     warn_once(
         "dsba.run",
-        "core.dsba.run is deprecated; use core.solvers.solve("
+        "core.dsba.run is deprecated and will be REMOVED in v0.2 (final "
+        "warning); use core.solvers.solve("
         f"problem, method={cfg.method!r}) instead",
         stacklevel=2,
     )

@@ -58,6 +58,62 @@ def logistic_coeff_prime(u, y):
 
 
 # ---------------------------------------------------------------------------
+# Bilinear-coupled finite-sum minimax (decentralized SGDA, Gao 2022 setting).
+#
+# Per sample (x, y) the saddle function over z = [w (d); theta] is
+#
+#   L_i(w, theta) = 1/2 (u - y)^2 + theta * y * u - gamma/2 * theta^2,
+#   u = x^T w,
+#
+# i.e. a least-squares primal bilinearly coupled to a scalar dual through
+# the label. The associated monotone operator is B = [dL/dw; -dL/dtheta]:
+#
+#   B_w     = ((u - y) + theta * y) x
+#   B_theta = gamma * theta - y * u
+#
+# whose Jacobian in (u, theta) is [[1, y], [-y, gamma]] — a PSD symmetric
+# part plus an antisymmetric coupling, so B is monotone (strongly once
+# lam*I is added) and the root of the regularized mean operator is the
+# saddle point of mean_i L_i + lam/2 ||w||^2 - lam/2 theta^2.
+# This reuses the AUC tail-block machinery with tail_dim = 1.
+# ---------------------------------------------------------------------------
+
+def bilinear_coeff_and_tail(u, y, tail, gamma):
+    """Returns (g, tail_out): B(z) = g*x (+) tail_out over (theta,)."""
+    theta = tail[..., 0]
+    g = (u - y) + theta * y
+    tt = gamma * theta - y * u
+    return g, tt[..., None]
+
+
+def bilinear_resolvent(s, psi_tail, y, gamma, a_eff, xsq):
+    """Closed-form 2x2 resolvent: solve v + a_eff * B(v) = rhs.
+
+    Scalar coordinates v = (u, theta), rhs = (s, psi_theta). The system is
+    affine, so this is one 2x2 solve:
+
+      (1 + a*xsq) u + a*xsq*y theta = s + a*xsq*y
+      -a*y u + (1 + a*gamma) theta  = psi_theta
+
+    with determinant (1+a*xsq)(1+a*gamma) + a^2*xsq*y^2 > 0 always.
+    Returns (g_at_solution, tail_solution) like the other resolvents.
+    """
+    psi_th = psi_tail[..., 0]
+    a11 = 1.0 + a_eff * xsq
+    a12 = a_eff * xsq * y
+    a21 = -a_eff * y
+    a22 = 1.0 + a_eff * gamma
+    r1 = s + a_eff * xsq * y
+    r2 = psi_th
+    det = a11 * a22 - a12 * a21
+    u = (a22 * r1 - a12 * r2) / det
+    theta = (a11 * r2 - a21 * r1) / det
+    g, tail_out = bilinear_coeff_and_tail(u, y, theta[..., None], gamma)
+    del tail_out  # resolvent returns the solution coordinates, not B(v)
+    return g, theta[..., None]
+
+
+# ---------------------------------------------------------------------------
 # scalar resolvents: solve  u + a_eff * g(u, y) * xsq = s  for u = x^T z
 # at the resolvent point, and return g(u*, y).
 #
@@ -169,21 +225,35 @@ def auc_resolvent(s, psi_tail, y, p, a_eff, xsq):
 # Operator spec: uniform interface used by DSBA / DSA / EXTRA / ...
 # ---------------------------------------------------------------------------
 
+#: operator families ("problem families" in solver capability records)
+FAMILIES = ("ridge", "logistic", "auc", "bilinear")
+
+#: families whose regularized mean operator is the gradient of a convex
+#: objective (vs. a genuine saddle operator) — descent-only methods such
+#: as Nesterov-accelerated consensus apply only to these.
+MINIMIZATION_FAMILIES = ("ridge", "logistic")
+
+_TAIL_DIMS = {"ridge": 0, "logistic": 0, "auc": 3, "bilinear": 1}
+
+
 @dataclasses.dataclass(frozen=True)
 class OperatorSpec:
     """A family of component operators B_{n,i} with linear predictors.
 
-    tail_dim: number of trailing dense coordinates in z (0 or 3 for AUC).
+    tail_dim: number of trailing dense coordinates in z
+      (3 for AUC's (a, b, theta), 1 for bilinear's theta, else 0).
     p: positive-class ratio (AUC only).
+    gamma: dual strong-concavity modulus (bilinear only).
     """
 
-    kind: str  # 'ridge' | 'logistic' | 'auc'
+    kind: str  # 'ridge' | 'logistic' | 'auc' | 'bilinear'
     p: float = 0.5
+    gamma: float = 1.0
 
     @property
     def tail_dim(self) -> int:
-        """Trailing dense coordinates of z: 3 for AUC's (a, b, theta), else 0."""
-        return 3 if self.kind == "auc" else 0
+        """Trailing dense coordinates of z (the non-predictor block)."""
+        return _TAIL_DIMS[self.kind]
 
     def coeff_and_tail(self, u, y, tail):
         """g and tail-output of B at predictor value u, tail coords `tail`."""
@@ -193,6 +263,8 @@ class OperatorSpec:
             return logistic_coeff(u, y), jnp.zeros_like(tail)
         if self.kind == "auc":
             return auc_coeff_and_tail(u, y, tail, self.p)
+        if self.kind == "bilinear":
+            return bilinear_coeff_and_tail(u, y, tail, self.gamma)
         raise ValueError(self.kind)
 
     def resolvent_coeff_and_tail(self, s, psi_tail, y, a_eff, xsq):
@@ -209,6 +281,8 @@ class OperatorSpec:
             return g, psi_tail
         if self.kind == "auc":
             return auc_resolvent(s, psi_tail, y, self.p, a_eff, xsq)
+        if self.kind == "bilinear":
+            return bilinear_resolvent(s, psi_tail, y, self.gamma, a_eff, xsq)
         raise ValueError(self.kind)
 
 

@@ -86,6 +86,16 @@ def objective(spec: OperatorSpec, data, lam: float):
                 )
             )
             return val + 0.5 * lam * jnp.sum(z * z)
+        if spec.kind == "bilinear":
+            th = z[data.d]
+            val = (
+                jnp.mean(0.5 * (u - labels) ** 2 + th * labels * u)
+                - 0.5 * spec.gamma * th**2
+            )
+            # regularized saddle value: +lam/2 on the primal block,
+            # -lam/2 on the dual block (matches B^lam = B + lam*I).
+            head_sq = jnp.sum(z[: data.d] ** 2)
+            return val + 0.5 * lam * head_sq - 0.5 * lam * th**2
         raise ValueError(spec.kind)
 
     return f

@@ -25,6 +25,10 @@ METHOD_HP = {
     "extra": {"alpha": 0.05},
     "dlm": {"c": 0.5, "beta": 1.0},
     "ssda": {"eta": 0.05},
+    # accelerated/sliding methods route K inner gossip rounds (resp. the
+    # periodic mixing select) through the same comm.matvec primitive
+    "mudag": {"eta": 0.5, "momentum": 0.5, "gossip_rounds": 2},
+    "sliding": {"alpha": 0.05, "comm_period": 2},
 }
 
 
@@ -59,6 +63,63 @@ def test_sharded_matches_dense(method, topology):
     np.testing.assert_allclose(
         np.asarray(rs.dist2), np.asarray(rd.dist2), atol=1e-12, rtol=1e-9
     )
+
+
+def test_dsgda_sharded_matches_dense_on_bilinear():
+    """The minimax family through the sharded backend: same 1e-12 parity."""
+    from repro.core import mixing
+    from repro.core.solvers import make_problem, solve
+    from repro.data.synthetic import make_regression
+
+    data = make_regression(N, 12, 6, k=4, seed=2)
+    problem = make_problem(
+        "bilinear", data, mixing.ring_graph(N), lam=5e-2
+    )
+    problem.solve_star()
+    kw = dict(steps=20, record_every=10, seed=1, alpha=0.2, eta=0.2)
+    rd = solve(problem, "dsgda", comm="dense", **kw)
+    rs = solve(problem, "dsgda", comm="sharded", **kw)
+    np.testing.assert_allclose(
+        np.asarray(rs.z), np.asarray(rd.z), atol=1e-12, rtol=0
+    )
+    np.testing.assert_allclose(
+        np.asarray(rs.dist2), np.asarray(rd.dist2), atol=1e-12, rtol=1e-9
+    )
+
+
+def test_sharded_capability_matrix_no_third_outcome():
+    """The sharded leg of tests/test_capabilities.py: every (method,
+    family) on a 4-node ring either solves under comm="sharded" or raises
+    CapabilityError, in exact agreement with the capability record."""
+    from repro.core import mixing
+    from repro.core.operators import FAMILIES
+    from repro.core.solvers import (
+        CapabilityError, available_solvers, make_problem, solve,
+    )
+    from repro.data.synthetic import make_classification, make_regression
+
+    n, q, d = 4, 4, 6
+    hp = {"ssda": dict(eta=1e-3, momentum=0.0),
+          "mudag": dict(eta=0.5, momentum=0.5)}
+    for family in FAMILIES:
+        if family in ("ridge", "bilinear"):
+            data = make_regression(n, q, d, k=3, seed=0)
+        else:
+            data = make_classification(n, q, d, k=3, positive_ratio=0.5,
+                                       seed=0)
+        problem = make_problem(family, data, mixing.ring_graph(n), lam=1e-2)
+        for method, caps in sorted(available_solvers().items()):
+            try:
+                res = solve(problem, method, comm="sharded", steps=2,
+                            record_every=2, seed=0, **hp.get(method, {}))
+            except CapabilityError as e:
+                assert not caps.supports("sharded", family)
+                assert (e.method, e.comm, e.family) == (
+                    method, "sharded", family
+                )
+                continue
+            assert caps.supports("sharded", family), (method, family)
+            assert np.isfinite(np.asarray(res.z)).all(), (method, family)
 
 
 def test_measured_collective_bytes_accounting():

@@ -1,0 +1,170 @@
+"""The PR 4 deprecation shims, pinned in ONE file for one-file removal.
+
+`core.dsba.run` and `core.baselines.run_*` have survived since PR 4 as
+parity-pinned delegates to `core.solvers.solve`. Everything that guards
+them lives here — parity pins (dsba/dsa bit-equal snapshot traces,
+baselines <= 1e-12 across ridge/logistic/auc on ring + Erdős–Rényi),
+once-per-process warning behavior, and the final-warning text with its
+removal version — so deleting the shims in v0.2 is this file plus the
+shim bodies, nothing else.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import deprecation, mixing
+from repro.core.baselines import run_dlm, run_extra, run_ssda
+from repro.core.dsba import DSBAConfig, draw_indices
+from repro.core.dsba import run as legacy_run
+from repro.core.solvers import make_problem, solve
+from repro.data.synthetic import make_classification, make_regression
+
+STEPS = 24
+REC = 8
+GRAPHS = ["ring", "erdos_renyi"]
+TASKS = ["ridge", "logistic", "auc"]
+
+
+@pytest.fixture
+def fresh_deprecations():
+    """Shim warnings fire once per process; reset so this test sees them."""
+    deprecation.reset()
+    yield
+    deprecation.reset()
+
+
+def _problem(task, gname="erdos_renyi", n_nodes=5, q=6, d=16, k=4, lam=1e-2,
+             seed=0):
+    if task == "ridge":
+        data = make_regression(n_nodes, q, d, k=k, seed=seed)
+    elif task == "logistic":
+        data = make_classification(n_nodes, q, d, k=k, seed=seed)
+    else:
+        data = make_classification(n_nodes, q, d, k=k, positive_ratio=0.3,
+                                   seed=seed)
+    if gname == "ring":
+        graph = mixing.ring_graph(n_nodes)
+    else:
+        graph = mixing.erdos_renyi_graph(n_nodes, 0.4, seed=1)
+    return make_problem(task, data, graph, lam=lam)
+
+
+# ---------------------------------------------------------------------------
+# shim parity: dsba/dsa bit-equal, baselines <= 1e-12
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gname", GRAPHS)
+@pytest.mark.parametrize("task", TASKS)
+def test_dsba_dsa_shims_bit_identical(task, gname, fresh_deprecations):
+    problem = _problem(task, gname)
+    n, q = problem.data.n_nodes, problem.data.q
+    indices = draw_indices(STEPS, n, q, seed=5)
+    for method in ("dsba", "dsa"):
+        cfg = DSBAConfig(problem.spec, 0.3, problem.lam, method=method)
+        deprecation.reset()
+        with pytest.warns(DeprecationWarning):
+            legacy = legacy_run(
+                cfg, problem.data, problem.w, STEPS, record_every=REC,
+                indices=indices, keep_snapshots=True,
+            )
+        new = solve(problem, method, steps=STEPS, record_every=REC,
+                    indices=indices, keep_snapshots=True, alpha=0.3)
+        assert np.array_equal(legacy.zs, new.zs), (task, gname, method)
+        assert np.array_equal(np.asarray(legacy.state.z), new.z)
+        assert (legacy.iters == new.iters).all()
+
+
+@pytest.mark.parametrize("gname", GRAPHS)
+@pytest.mark.parametrize("task", TASKS)
+def test_baseline_shims_trace_match(task, gname, fresh_deprecations):
+    problem = _problem(task, gname)
+    z_star = problem.solve_star()
+    data, w, lam = problem.data, problem.w, problem.lam
+
+    deprecation.reset()
+    with pytest.warns(DeprecationWarning):
+        legacy = run_extra(problem.spec, data, w, alpha=0.2, lam=lam,
+                           steps=STEPS, z_star=z_star, record_every=REC)
+    new = solve(problem, "extra", steps=STEPS, record_every=REC, alpha=0.2)
+    np.testing.assert_allclose(
+        np.asarray(legacy.state[0]), new.z, rtol=0, atol=1e-12
+    )
+    np.testing.assert_allclose(legacy.dist2, new.dist2, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(legacy.consensus, new.consensus, rtol=0,
+                               atol=1e-12)
+
+    deprecation.reset()
+    with pytest.warns(DeprecationWarning):
+        legacy = run_dlm(problem.spec, data, problem.graph, c=0.3, beta=1.0,
+                         lam=lam, steps=STEPS, z_star=z_star,
+                         record_every=REC)
+    new = solve(problem, "dlm", steps=STEPS, record_every=REC, c=0.3,
+                beta=1.0)
+    np.testing.assert_allclose(
+        np.asarray(legacy.state[0]), new.z, rtol=0, atol=1e-12
+    )
+    np.testing.assert_allclose(legacy.dist2, new.dist2, rtol=0, atol=1e-12)
+
+    if task != "auc":  # the paper: SSDA does not apply to the AUC saddle
+        deprecation.reset()
+        with pytest.warns(DeprecationWarning):
+            legacy = run_ssda(problem.spec, data, w, eta=0.05, momentum=0.5,
+                              lam=lam, steps=STEPS, z_star=z_star,
+                              record_every=REC)
+        new = solve(problem, "ssda", steps=STEPS, record_every=REC,
+                    eta=0.05, momentum=0.5)
+        np.testing.assert_allclose(legacy.dist2, new.dist2, rtol=0,
+                                   atol=1e-12)
+        np.testing.assert_allclose(legacy.consensus, new.consensus, rtol=0,
+                                   atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# warning behavior: once per process, attributed to the caller, final text
+# ---------------------------------------------------------------------------
+
+
+def test_shims_warn_once_per_process_at_caller(fresh_deprecations):
+    """Sweep loops through legacy shims must not spam: one warning per shim
+    per process, attributed (stacklevel) to the caller's file."""
+    problem = _problem("ridge")
+    cfg = DSBAConfig(problem.spec, 0.3, problem.lam, method="dsba")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(3):
+            legacy_run(cfg, problem.data, problem.w, 4, record_every=4)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert dep[0].filename == __file__
+
+    deprecation.reset()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(3):
+            run_extra(problem.spec, problem.data, problem.w, alpha=0.2,
+                      lam=problem.lam, steps=4)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert dep[0].filename == __file__
+
+
+def test_shims_announce_removal_version(fresh_deprecations):
+    """The final-warning text names the removal version, per shim."""
+    problem = _problem("ridge")
+    cfg = DSBAConfig(problem.spec, 0.3, problem.lam, method="dsba")
+    with pytest.warns(DeprecationWarning, match=r"REMOVED in v0\.2"):
+        legacy_run(cfg, problem.data, problem.w, 4, record_every=4)
+    deprecation.reset()
+    with pytest.warns(DeprecationWarning, match=r"REMOVED in v0\.2"):
+        run_extra(problem.spec, problem.data, problem.w, alpha=0.2,
+                  lam=problem.lam, steps=4)
+    deprecation.reset()
+    with pytest.warns(DeprecationWarning, match=r"REMOVED in v0\.2"):
+        run_dlm(problem.spec, problem.data, problem.graph, c=0.3, beta=1.0,
+                lam=problem.lam, steps=4)
+    deprecation.reset()
+    with pytest.warns(DeprecationWarning, match=r"REMOVED in v0\.2"):
+        run_ssda(problem.spec, problem.data, problem.w, eta=0.05,
+                 momentum=0.5, lam=problem.lam, steps=4)

@@ -17,6 +17,7 @@ SPECS = {
     "ridge": OperatorSpec("ridge"),
     "logistic": OperatorSpec("logistic"),
     "auc": OperatorSpec("auc", p=0.3),
+    "bilinear": OperatorSpec("bilinear", gamma=0.7),
 }
 
 
@@ -104,6 +105,46 @@ def test_auc_operator_matches_autodiff_of_saddle_function():
         np.testing.assert_allclose(np.asarray(got), np.asarray(expected), atol=1e-9)
 
 
+def test_bilinear_operator_matches_autodiff_of_saddle_function():
+    """B = [dL/dw; -dL/dtheta] for the bilinear-coupled minimax loss."""
+    gamma = 0.7
+    spec = SPECS["bilinear"]
+    rng = np.random.default_rng(4)
+    d = 6
+    x = rng.standard_normal(d)
+    x /= np.linalg.norm(x)
+
+    def L(z, y):
+        w, th = z[:d], z[d]
+        u = x @ w
+        return 0.5 * (u - y) ** 2 + th * y * u - 0.5 * gamma * th**2
+
+    for y in (1.0, -1.0, 0.4):
+        z = jnp.asarray(rng.standard_normal(d + 1))
+        grad = jax.grad(L)(z, y)
+        expected = grad.at[-1].multiply(-1.0)  # negate theta component
+        got = full_component_operator(spec, z, jnp.asarray(x), y)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(expected),
+                                   atol=1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.floats(-3, 3), min_size=5, max_size=5),
+    st.lists(st.floats(-3, 3), min_size=5, max_size=5),
+    st.sampled_from([1.0, -1.0, 0.4]),
+)
+def test_bilinear_operator_is_monotone(z1_l, z2_l, y):
+    """PSD symmetric part + antisymmetric coupling => monotone."""
+    spec = SPECS["bilinear"]
+    x = np.asarray([0.5, -0.5, 0.5, 0.5])
+    z1, z2 = jnp.asarray(z1_l), jnp.asarray(z2_l)
+    b1 = full_component_operator(spec, z1, jnp.asarray(x), y)
+    b2 = full_component_operator(spec, z2, jnp.asarray(x), y)
+    inner = float((b1 - b2) @ (z1 - z2))
+    assert inner >= -1e-9
+
+
 def test_logistic_coeff_prime_matches_autodiff():
     u = jnp.linspace(-4, 4, 23)
     for y in (1.0, -1.0):
@@ -151,7 +192,7 @@ def test_auc_operator_is_monotone(z1_l, z2_l, y):
 @given(
     st.lists(st.floats(-5, 5), min_size=5, max_size=5),
     st.lists(st.floats(-5, 5), min_size=5, max_size=5),
-    st.sampled_from(["ridge", "logistic", "auc"]),
+    st.sampled_from(["ridge", "logistic", "auc", "bilinear"]),
     st.sampled_from([1.0, -1.0]),
     st.floats(0.05, 2.0),
 )

@@ -22,9 +22,10 @@ def test_multidevice_tier_passes(forced_devices_pytest):
     assert proc.returncode == 0, out
     m = re.search(r"(\d+) passed", out)
     assert m, out
-    # 10 parity cases + the accounting/cache/error/gossip tests: the tier
-    # must actually RUN under 8 devices, not skip itself away
-    assert int(m.group(1)) >= 14, out
+    # 14 parity cases (7 methods x 2 graphs) + the dsgda/bilinear parity,
+    # the sharded capability matrix, and the accounting/cache/error/gossip
+    # tests: the tier must actually RUN under 8 devices, not skip itself away
+    assert int(m.group(1)) >= 20, out
     assert "skipped" not in out, out
 
 

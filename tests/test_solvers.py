@@ -1,27 +1,22 @@
-"""The solver registry: one `solve()` entrypoint, shims pinned trace-identical.
+"""The solver registry: one `solve()` entrypoint with typed capabilities.
 
-Two claims:
-
-1. Registry semantics — five methods x {dense, sparse-where-supported}
-   dispatch through `core.solvers.solve`, unknown methods / comm backends /
-   hyperparameters fail loudly, and the SolveResult schema is uniform.
-2. Shim parity — the deprecated wrappers (`core.dsba.run`,
-   `core.baselines.run_*`) reproduce `solve(method=..., comm="dense")`
-   exactly: bit-equal snapshot traces for dsba/dsa, <=1e-12 across
-   ridge/logistic/auc on ring + Erdős–Rényi graphs for the baselines.
+Registry semantics — the registered methods x {dense, sparse-where-
+supported} dispatch through `core.solvers.solve`, `available_solvers()`
+exposes a typed `SolverCapabilities` record per method, unknown methods /
+comm backends / hyperparameters fail loudly (unsupported combinations as
+`CapabilityError`), and the SolveResult schema is uniform. The deprecated
+shim parity pins live in `tests/test_deprecated_shims.py`.
 """
-import warnings
-
 import numpy as np
 import pytest
 
-from repro.core import deprecation, mixing, reference
-from repro.core.baselines import run_dlm, run_extra, run_ssda
-from repro.core.dsba import DSBAConfig, draw_indices
-from repro.core.dsba import run as legacy_run
+from repro.core import mixing, reference
+from repro.core.dsba import draw_indices
 from repro.core.operators import OperatorSpec
 from repro.core.solvers import (
+    CapabilityError,
     Problem,
+    SolverCapabilities,
     available_solvers,
     get_solver,
     graph_from_mixing,
@@ -35,14 +30,6 @@ STEPS = 24
 REC = 8
 GRAPHS = ["ring", "erdos_renyi"]
 TASKS = ["ridge", "logistic", "auc"]
-
-
-@pytest.fixture
-def fresh_deprecations():
-    """Shim warnings fire once per process; reset so this test sees them."""
-    deprecation.reset()
-    yield
-    deprecation.reset()
 
 
 def _problem(task, gname="erdos_renyi", n_nodes=5, q=6, d=16, k=4, lam=1e-2,
@@ -66,13 +53,36 @@ def _problem(task, gname="erdos_renyi", n_nodes=5, q=6, d=16, k=4, lam=1e-2,
 # ---------------------------------------------------------------------------
 
 
-def test_registry_has_all_five_methods():
+def test_registry_exposes_capability_records():
     avail = available_solvers()
-    assert set(avail) == {"dsba", "dsa", "extra", "dlm", "ssda"}
+    assert set(avail) == {
+        "dsba", "dsa", "extra", "dlm", "ssda", "mudag", "sliding", "dsgda"
+    }
+    assert all(isinstance(c, SolverCapabilities) for c in avail.values())
     # sparse comm: the stochastic family only (the paper's relay broadcasts
-    # per-sample deltas; the deterministic baselines are dense by nature)
-    assert avail == {"dsba": True, "dsa": True, "extra": False,
-                     "dlm": False, "ssda": False}
+    # per-sample deltas; everything else exchanges dense vectors by nature)
+    assert {n: c.supports_sparse_comm for n, c in avail.items()} == {
+        "dsba": True, "dsa": True, "extra": False, "dlm": False,
+        "ssda": False, "mudag": False, "sliding": False, "dsgda": False,
+    }
+    # every registered step is written against comm.matvec/comm.local
+    assert all(c.supports_sharded for c in avail.values())
+    # the problem-family axis: the paper's scalar-table machinery covers
+    # every linear-predictor family incl. the bilinear saddle; descent-only
+    # methods are minimization-only; descent-ascent is saddle-only
+    assert avail["dsba"].problem_families == (
+        "ridge", "logistic", "auc", "bilinear"
+    )
+    assert avail["mudag"].problem_families == ("ridge", "logistic")
+    assert avail["sliding"].problem_families == ("ridge", "logistic")
+    assert avail["ssda"].problem_families == ("ridge", "logistic")
+    assert avail["dsgda"].problem_families == ("auc", "bilinear")
+    # derived views used by solve()'s capability gate
+    assert avail["mudag"].comm_backends() == ("dense", "sharded")
+    assert avail["dsba"].comm_backends() == ("dense", "sparse", "sharded")
+    assert avail["dsba"].supports("sparse", "bilinear")
+    assert not avail["mudag"].supports("sparse", "ridge")
+    assert not avail["dsgda"].supports("dense", "ridge")
 
 
 def test_unknown_method_comm_and_hyperparams_fail_loudly():
@@ -158,101 +168,29 @@ def test_solve_replays_identically_from_seed_and_indices():
 
 
 # ---------------------------------------------------------------------------
-# shim parity: dsba/dsa bit-equal, baselines <= 1e-12
+# typed capability failures: CapabilityError names the combination
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("gname", GRAPHS)
-@pytest.mark.parametrize("task", TASKS)
-def test_dsba_dsa_shims_bit_identical(task, gname, fresh_deprecations):
-    problem = _problem(task, gname)
-    n, q = problem.data.n_nodes, problem.data.q
-    indices = draw_indices(STEPS, n, q, seed=5)
-    for method in ("dsba", "dsa"):
-        cfg = DSBAConfig(problem.spec, 0.3, problem.lam, method=method)
-        deprecation.reset()
-        with pytest.warns(DeprecationWarning):
-            legacy = legacy_run(
-                cfg, problem.data, problem.w, STEPS, record_every=REC,
-                indices=indices, keep_snapshots=True,
-            )
-        new = solve(problem, method, steps=STEPS, record_every=REC,
-                    indices=indices, keep_snapshots=True, alpha=0.3)
-        assert np.array_equal(legacy.zs, new.zs), (task, gname, method)
-        assert np.array_equal(np.asarray(legacy.state.z), new.z)
-        assert (legacy.iters == new.iters).all()
-
-
-@pytest.mark.parametrize("gname", GRAPHS)
-@pytest.mark.parametrize("task", TASKS)
-def test_baseline_shims_trace_match(task, gname, fresh_deprecations):
-    problem = _problem(task, gname)
-    z_star = problem.solve_star()
-    data, w, lam = problem.data, problem.w, problem.lam
-
-    deprecation.reset()
-    with pytest.warns(DeprecationWarning):
-        legacy = run_extra(problem.spec, data, w, alpha=0.2, lam=lam,
-                           steps=STEPS, z_star=z_star, record_every=REC)
-    new = solve(problem, "extra", steps=STEPS, record_every=REC, alpha=0.2)
-    np.testing.assert_allclose(
-        np.asarray(legacy.state[0]), new.z, rtol=0, atol=1e-12
-    )
-    np.testing.assert_allclose(legacy.dist2, new.dist2, rtol=0, atol=1e-12)
-    np.testing.assert_allclose(legacy.consensus, new.consensus, rtol=0,
-                               atol=1e-12)
-
-    deprecation.reset()
-    with pytest.warns(DeprecationWarning):
-        legacy = run_dlm(problem.spec, data, problem.graph, c=0.3, beta=1.0,
-                         lam=lam, steps=STEPS, z_star=z_star,
-                         record_every=REC)
-    new = solve(problem, "dlm", steps=STEPS, record_every=REC, c=0.3,
-                beta=1.0)
-    np.testing.assert_allclose(
-        np.asarray(legacy.state[0]), new.z, rtol=0, atol=1e-12
-    )
-    np.testing.assert_allclose(legacy.dist2, new.dist2, rtol=0, atol=1e-12)
-
-    if task != "auc":  # the paper: SSDA does not apply to the AUC saddle
-        deprecation.reset()
-        with pytest.warns(DeprecationWarning):
-            legacy = run_ssda(problem.spec, data, w, eta=0.05, momentum=0.5,
-                              lam=lam, steps=STEPS, z_star=z_star,
-                              record_every=REC)
-        new = solve(problem, "ssda", steps=STEPS, record_every=REC,
-                    eta=0.05, momentum=0.5)
-        np.testing.assert_allclose(legacy.dist2, new.dist2, rtol=0,
-                                   atol=1e-12)
-        np.testing.assert_allclose(legacy.consensus, new.consensus, rtol=0,
-                                   atol=1e-12)
-
-
-def test_ssda_rejects_auc_tail():
+def test_ssda_rejects_auc_tail_as_capability_error():
+    """The paper: SSDA needs grad f* and does not apply to the AUC saddle.
+    Pre-PR-7 this surfaced as a factory-time NotImplementedError; now it is
+    a typed CapabilityError (a ValueError) naming the combination."""
     problem = _problem("auc")
-    with pytest.raises(NotImplementedError, match="SSDA"):
+    with pytest.raises(CapabilityError, match="ssda.*auc") as ei:
         solve(problem, "ssda", steps=2)
+    assert (ei.value.method, ei.value.comm, ei.value.family) == (
+        "ssda", "dense", "auc"
+    )
+    assert isinstance(ei.value, ValueError)
 
 
-def test_shims_warn_once_per_process_at_caller(fresh_deprecations):
-    """Sweep loops through legacy shims must not spam: one warning per shim
-    per process, attributed (stacklevel) to the caller's file."""
+def test_capability_error_not_silent_dense_fallback():
+    """mudag/sliding have no sparse backend: asking for comm='sparse' must
+    be a typed error naming (method, comm, family) — never a dense run."""
     problem = _problem("ridge")
-    cfg = DSBAConfig(problem.spec, 0.3, problem.lam, method="dsba")
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        for _ in range(3):
-            legacy_run(cfg, problem.data, problem.w, 4, record_every=4)
-    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 1
-    assert dep[0].filename == __file__
-
-    deprecation.reset()
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        for _ in range(3):
-            run_extra(problem.spec, problem.data, problem.w, alpha=0.2,
-                      lam=problem.lam, steps=4)
-    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 1
-    assert dep[0].filename == __file__
+    for method in ("mudag", "sliding"):
+        with pytest.raises(CapabilityError, match=f"{method}.*sparse"):
+            solve(problem, method, comm="sparse", steps=2)
+    with pytest.raises(CapabilityError, match="dsgda.*ridge"):
+        solve(problem, "dsgda", steps=2)
