@@ -61,7 +61,7 @@ class DSBAConfig:
 
     spec: OperatorSpec
     alpha: float  # step size
-    lam: float = 0.0  # l2 regularization
+    lam: float | np.ndarray = 0.0  # l2 reg; (N,) = per-node personalization
     method: str = "dsba"  # 'dsba' (backward) | 'dsa' (forward, Remark 5.1)
 
 
@@ -146,6 +146,10 @@ def dsba_step(
     t = spec.tail_dim
     d = state.z.shape[1] - t
     dt = state.z.dtype
+    # per-node lam (personalization): lam is (N,) and rho/a_eff become
+    # per-node vectors; the scalar path below is byte-identical to before
+    per_node = jnp.ndim(lam) > 0
+    lam_col = lam[:, None] if per_node else lam
     rho = 1.0 / (1.0 + alpha * lam)
     a_eff = rho * alpha
     idx_s = _gather_rows(data_idx, i_t)  # (N, k)
@@ -174,7 +178,7 @@ def dsba_step(
     else:
         mix_t = wt.astype(dt) @ (2.0 * state.z - state.z_prev) if mix is None else mix
         mix_0 = w.astype(dt) @ state.z if mix is None else mix
-    psi_t = mix_t + alpha * lam * state.z
+    psi_t = mix_t + alpha * lam_col * state.z
     psi_t = add_sparse(
         psi_t,
         state.didx_prev,
@@ -192,12 +196,21 @@ def dsba_step(
     if cfg.method == "dsba":
         # backward step: z^{t+1} = J_{alpha B^lam_{n,i}}(psi)  (eq. 30)
         s = gather_u(psi[:, :d], idx_s, val_s)
-        g_new, tail_z = jax.vmap(
-            lambda s_, pt_, y_, x_: spec.resolvent_coeff_and_tail(
-                rho * s_, rho * pt_, y_, a_eff, x_
-            )
-        )(s, psi[:, d:], y_s, xsq)
-        z_new = rho * psi
+        if per_node:
+            # vmap the per-node rho/a_eff alongside the sampled rows
+            g_new, tail_z = jax.vmap(
+                lambda r_, a_, s_, pt_, y_, x_: spec.resolvent_coeff_and_tail(
+                    r_ * s_, r_ * pt_, y_, a_, x_
+                )
+            )(rho, a_eff, s, psi[:, d:], y_s, xsq)
+            z_new = rho[:, None] * psi
+        else:
+            g_new, tail_z = jax.vmap(
+                lambda s_, pt_, y_, x_: spec.resolvent_coeff_and_tail(
+                    rho * s_, rho * pt_, y_, a_eff, x_
+                )
+            )(s, psi[:, d:], y_s, xsq)
+            z_new = rho * psi
         z_new = add_sparse(
             z_new, idx_s, val_s, -a_eff * g_new, jnp.zeros((n, t), dt)
         )
@@ -217,7 +230,7 @@ def dsba_step(
         # -alpha*lam*(z^t - z^{t-1}). At t=0 psi has no lam term and the
         # forward step subtracts alpha*lam*z^0 directly.
         lam_pt = jnp.where(is0, state.z, 2.0 * state.z - state.z_prev)
-        z_new = psi - alpha * lam * lam_pt
+        z_new = psi - alpha * lam_col * lam_pt
         z_new = add_sparse(z_new, idx_s, val_s, -alpha * g_upd, -alpha * tail_upd)
     else:
         raise ValueError(cfg.method)

@@ -95,6 +95,24 @@ class Graph:
         """max_{u,v} xi(u, v) — the relay protocol's warm-up horizon."""
         return int(max(self.distances_from(s).max() for s in range(self.n)))
 
+    def subgraph(self, keep: "list[int] | tuple[int, ...]") -> "Graph":
+        """Induced subgraph on `keep` (renumbered 0..len(keep)-1, in order).
+
+        The churn path uses this for survivor graphs; the result may be
+        disconnected — callers that need a connected mixing graph should
+        check ``is_connected()`` (e.g. before ``laplacian_mixing``).
+        """
+        keep = list(keep)
+        if len(set(keep)) != len(keep):
+            raise ValueError("subgraph keep-list has duplicates")
+        remap = {old: new for new, old in enumerate(keep)}
+        edges = tuple(
+            (min(remap[i], remap[j]), max(remap[i], remap[j]))
+            for i, j in self.edges
+            if i in remap and j in remap
+        )
+        return Graph(len(keep), edges)
+
 
 def ring_graph(n: int) -> Graph:
     """Cycle over n nodes (diameter n//2 — the deepest standard relay)."""
@@ -206,6 +224,20 @@ def validate_mixing(w: np.ndarray, graph: Graph, atol: float = 1e-10) -> None:
         raise AssertionError("leading eigenvector is not the consensus vector")
     if eigvals.min() < -atol or eigvals.max() > 1 + 1e-8:
         raise AssertionError(f"spectral property violated: {eigvals}")
+
+
+def spectral_gap(w: np.ndarray) -> float:
+    """1 - |lambda_2(W)|: positive iff the mixing matrix contracts consensus.
+
+    lambda_2 is the second-largest eigenvalue *in magnitude* (the largest is
+    the consensus eigenvalue 1). Per-segment gaps of a graph schedule are
+    recorded in ``SolveResult.extras["schedule"]`` — each segment's geometric
+    consensus rate is governed by its own gap.
+    """
+    eigvals = np.sort(np.abs(np.linalg.eigvalsh(np.asarray(w, np.float64))))
+    if eigvals.size == 1:
+        return 1.0
+    return float(1.0 - eigvals[-2])
 
 
 def graph_gamma(w: np.ndarray) -> float:

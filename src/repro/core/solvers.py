@@ -51,7 +51,7 @@ from repro.core.dsba import (
     init_state as _dsba_init_state,
     make_step_fn as _dsba_make_step_fn,
 )
-from repro.core.mixing import Graph, laplacian_mixing, w_tilde
+from repro.core.mixing import Graph, laplacian_mixing, spectral_gap, w_tilde
 from repro.core.operators import (
     FAMILIES,
     MINIMIZATION_FAMILIES,
@@ -99,14 +99,28 @@ class Problem:
     (defaults to the paper's Laplacian weights on ``graph``), the l2
     regularizer ``lam`` (part of the *problem*, not the solver), and an
     optional cached centralized root ``z_star``.
+
+    ``lam`` may be a scalar or an (N,) per-node array (personalization);
+    per-node lam runs on ``comm="dense"`` with methods advertising
+    ``supports_per_node_lam`` — anything else is a ``CapabilityError``.
+
+    ``schedule`` makes the network axis time-varying: a sequence of
+    ``(start_iter, Graph-or-W)`` segments. ``solve()`` runs each segment
+    through its own cached runner (edge colorings / relay waves re-derived
+    per segment) carrying the solver state across boundaries, and records
+    each segment's spectral gap in ``SolveResult.extras["schedule"]``. A
+    segment given as a ``Graph`` gets the paper's Laplacian mixing; one
+    given as a W matrix recovers its graph from the support. If no segment
+    starts at 0, the problem's own (graph, w) opens the schedule.
     """
 
     spec: OperatorSpec
     data: Any  # repro.data.synthetic.SparseDataset (duck-typed)
     graph: Graph
     w: np.ndarray | None = None
-    lam: float = 0.0
+    lam: float | np.ndarray = 0.0
     z_star: np.ndarray | None = None
+    schedule: Any = None  # normalized to ((start, Graph, W), ...) or None
 
     def __post_init__(self):
         """Default ``w`` to Laplacian mixing and sanity-check shapes."""
@@ -121,6 +135,17 @@ class Problem:
             raise ValueError(
                 f"data has {self.data.n_nodes} nodes, graph {self.graph.n}"
             )
+        if np.ndim(self.lam) > 0:
+            self.lam = np.asarray(self.lam, dtype=np.float64)
+            if self.lam.shape != (self.graph.n,):
+                raise ValueError(
+                    f"per-node lam must be ({self.graph.n},), "
+                    f"got {self.lam.shape}"
+                )
+        if self.schedule is not None:
+            self.schedule = _normalize_schedule(
+                self.schedule, self.graph, self.w, self.data.n_nodes
+            )
 
     @property
     def dim(self) -> int:
@@ -132,12 +157,54 @@ class Problem:
 
         Delegates to ``reference.solve_root``; extra kwargs (``iters``,
         ``tol``) pass through. Idempotent: repeated calls return the cache.
+        Per-node ``lam`` has no single centralized root — use
+        ``personalized_root`` for those problems.
         """
         if self.z_star is None:
+            if np.ndim(self.lam) > 0:
+                raise ValueError(
+                    "per-node lam has no centralized root; use "
+                    "core.solvers.personalized_root for the coupled system"
+                )
             self.z_star = reference.solve_root(
                 self.spec, self.data, self.lam, **kwargs
             )
         return self.z_star
+
+
+def _normalize_schedule(schedule, graph0: Graph, w0, n: int):
+    """Normalize ``(start, Graph-or-W)`` entries to ``(start, Graph, W)``.
+
+    Starts must be unique non-negative ints; segments are sorted and, when
+    none starts at 0, the problem's own (graph, w) opens the schedule.
+    """
+    segs = []
+    for start, g in schedule:
+        start = int(start)
+        if start < 0:
+            raise ValueError(f"schedule segment start {start} < 0")
+        if isinstance(g, Graph):
+            seg_graph, seg_w = g, laplacian_mixing(g)
+        else:
+            seg_w = np.asarray(g)
+            if seg_w.shape != (n, n):
+                raise ValueError(
+                    f"schedule segment W {seg_w.shape} != ({n}, {n})"
+                )
+            seg_graph = graph_from_mixing(seg_w)
+        if seg_graph.n != n:
+            raise ValueError(
+                f"schedule segment graph has {seg_graph.n} nodes, "
+                f"problem has {n}"
+            )
+        segs.append((start, seg_graph, seg_w))
+    segs.sort(key=lambda s: s[0])
+    starts = [s[0] for s in segs]
+    if len(set(starts)) != len(starts):
+        raise ValueError(f"duplicate schedule segment starts {starts}")
+    if not segs or segs[0][0] != 0:
+        segs.insert(0, (0, graph0, np.asarray(w0)))
+    return tuple(segs)
 
 
 def make_problem(
@@ -168,6 +235,71 @@ def make_problem(
     if lam is None:
         lam = 1.0 / (10.0 * data.total)
     return Problem(spec=spec, data=data, graph=graph, w=w, lam=lam)
+
+
+# ---------------------------------------------------------------------------
+# Node churn: fault plans (kill/join events) applied mid-run by solve()
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ChurnEvent:
+    """One membership change at iteration ``at`` (after ``at`` steps ran).
+
+    kind="kill": ``nodes`` (in the membership numbering CURRENT at ``at``)
+    leave; survivors keep going on ``graph`` (default: the induced
+    subgraph, which must be connected) with mixing ``w`` (default: the
+    paper's Laplacian weights). kind="join": ``n_new`` nodes join,
+    seeded — state rows AND data shard — from node ``seed_from``
+    (matching ``ElasticGossip.grow``); ``graph`` over the grown
+    membership is required (the old graph says nothing about the
+    newcomers' wiring).
+    """
+
+    at: int
+    kind: str  # "kill" | "join"
+    nodes: tuple[int, ...] = ()
+    n_new: int = 0
+    seed_from: int = 0
+    graph: Graph | None = None
+    w: np.ndarray | None = None
+
+    def __post_init__(self):
+        """Validate the event's own fields (graph-vs-membership at use)."""
+        if self.kind not in ("kill", "join"):
+            raise ValueError(f"churn event kind {self.kind!r} is not kill|join")
+        object.__setattr__(self, "nodes", tuple(int(x) for x in self.nodes))
+        if self.kind == "kill" and not self.nodes:
+            raise ValueError("kill event needs at least one node")
+        if self.kind == "join":
+            if self.n_new < 1:
+                raise ValueError("join event needs n_new >= 1")
+            if self.graph is None:
+                raise ValueError(
+                    "join event requires a graph over the grown membership"
+                )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ChurnPlan:
+    """An ordered fault-injection plan: strictly increasing event times.
+
+    Passed to ``solve()`` as ``comm_options={"fault_plan": plan}`` (dense
+    and sharded backends; methods advertising ``supports_churn``). Tests
+    use it to kill/join nodes deterministically and assert re-convergence
+    on the survivor system.
+    """
+
+    events: tuple[ChurnEvent, ...]
+
+    def __post_init__(self):
+        """Normalize to a tuple and check event times are increasing."""
+        object.__setattr__(self, "events", tuple(self.events))
+        ats = [e.at for e in self.events]
+        if any(b <= a for a, b in zip(ats, ats[1:])):
+            raise ValueError(f"churn event times must strictly increase: {ats}")
+        if not self.events:
+            raise ValueError("ChurnPlan needs at least one event")
 
 
 # ---------------------------------------------------------------------------
@@ -231,6 +363,25 @@ class SolverSpec:
       (every pre-PR-7 method). Mudag's K inner gossip rounds (2K/iter)
       and sliding's skipped rounds (2*ceil(iters/period)) report through
       this hook, so ``SolveResult.doubles_received`` stays honest.
+    - ``supports_schedule``: the method's fixed point is preserved under a
+      mid-run change of the mixing matrix, so ``solve()`` may carry its
+      state across the segments of a ``Problem.schedule``
+      (restart-on-new-W — docs/algorithm.md). Methods whose *state*
+      encodes W (EXTRA/DLM's duals, SSDA's dual momentum) must leave this
+      False: carrying their state over a W change targets a stale fixed
+      point, and that is a ``CapabilityError``, not a silent restart.
+    - ``supports_churn``: the state pytree keeps all per-node quantities
+      on leading-N leaves AND the fixed point survives membership change,
+      so ``ft.elastic.ElasticGossip`` shrink/grow remapping is sound.
+    - ``reanchor``: optional ``(state) -> state`` applied after an
+      elastic churn remap. Difference-form methods (DSBA/DSA) conserve a
+      telescoped mean-drift invariant anchored by their t=0 step; a
+      membership change alters the node mean, so the anchor must re-run
+      on the new membership or the run converges to the OLD system's
+      root (docs/algorithm.md). A W-only switch preserves the invariant
+      (1^T W = 1^T for any doubly stochastic W) and does NOT reanchor.
+    - ``supports_per_node_lam``: the step accepts ``lam`` as an (N,)
+      array (personalized regularization) — dense backend only.
     """
 
     name: str
@@ -245,6 +396,10 @@ class SolverSpec:
     problem_families: tuple[str, ...] = ("ridge", "logistic", "auc")
     supports_sharded: bool = True
     comm_rounds: Callable[[Mapping[str, float], np.ndarray], np.ndarray] | None = None
+    supports_schedule: bool = False
+    supports_churn: bool = False
+    supports_per_node_lam: bool = False
+    reanchor: Callable[[Any], Any] | None = None
 
     def supports_sparse_comm(self) -> bool:
         """Whether this method has a sparse-communication backend."""
@@ -256,6 +411,9 @@ class SolverSpec:
             supports_sparse_comm=self.sparse_run is not None,
             supports_sharded=self.supports_sharded,
             problem_families=tuple(self.problem_families),
+            supports_schedule=self.supports_schedule,
+            supports_churn=self.supports_churn,
+            supports_per_node_lam=self.supports_per_node_lam,
         )
 
 
@@ -266,12 +424,19 @@ class SolverCapabilities:
     Returned per method by ``available_solvers()``. ``solve()`` enforces
     exactly this record: a (method, comm backend, operator family)
     combination outside it raises ``CapabilityError`` — never a silent
-    fallback to a backend the caller did not ask for.
+    fallback to a backend the caller did not ask for. The same rule
+    covers the dynamic-network axes: a multi-segment ``schedule``, a
+    churn ``fault_plan``, or a per-node ``lam`` on a method that does
+    not advertise the capability raises before any factory runs — never
+    a silent static fallback.
     """
 
     supports_sparse_comm: bool
     supports_sharded: bool
     problem_families: tuple[str, ...]
+    supports_schedule: bool = False
+    supports_churn: bool = False
+    supports_per_node_lam: bool = False
 
     def comm_backends(self) -> tuple[str, ...]:
         """The comm backends this solver accepts (dense is universal)."""
@@ -305,8 +470,22 @@ class CapabilityError(ValueError):
         self.family = family
 
 
-def _check_capability(spec: "SolverSpec", comm: str, family: str) -> None:
-    """Raise ``CapabilityError`` unless (spec, comm, family) is supported."""
+def _check_capability(
+    spec: "SolverSpec",
+    comm: str,
+    family: str,
+    *,
+    schedule: bool = False,
+    churn: bool = False,
+    per_node_lam: bool = False,
+) -> None:
+    """Raise ``CapabilityError`` unless (spec, comm, family) is supported.
+
+    The keyword flags add the dynamic-network axes: a multi-segment graph
+    ``schedule``, a ``churn`` fault plan, or a ``per_node_lam`` array.
+    Runs before any solver factory, so an unsupported combination can
+    never silently fall back to a static run.
+    """
     caps = spec.capabilities()
     if family not in caps.problem_families:
         raise CapabilityError(
@@ -324,13 +503,42 @@ def _check_capability(spec: "SolverSpec", comm: str, family: str) -> None:
             spec.name, comm, family,
             f"method {spec.name!r} does not run under the sharded backend",
         )
+    if schedule and not caps.supports_schedule:
+        raise CapabilityError(
+            spec.name, comm, family,
+            f"method {spec.name!r} does not support graph schedules: its "
+            "state would carry a stale fixed point across a W change",
+        )
+    if churn and not caps.supports_churn:
+        raise CapabilityError(
+            spec.name, comm, family,
+            f"method {spec.name!r} does not support node churn "
+            "(fault_plan): its state cannot be elastically remapped",
+        )
+    if churn and comm == "sparse":
+        raise CapabilityError(
+            spec.name, comm, family,
+            "node churn is unavailable under comm='sparse': the delta "
+            "relay's protocol tables are derived for the whole graph",
+        )
+    if per_node_lam and not caps.supports_per_node_lam:
+        raise CapabilityError(
+            spec.name, comm, family,
+            f"method {spec.name!r} does not support per-node lam "
+            "(personalization); see available_solvers()",
+        )
+    if per_node_lam and comm != "dense":
+        raise CapabilityError(
+            spec.name, comm, family,
+            "per-node lam (personalization) runs on comm='dense' only",
+        )
 
 
 #: per-backend comm_options schema enforced by ``_validate_options``
 _COMM_OPTION_KEYS = {
-    "dense": (),
+    "dense": ("fault_plan",),
     "sparse": ("engine", "verify", "use_pallas"),
-    "sharded": ("mesh",),
+    "sharded": ("mesh", "fault_plan"),
 }
 
 
@@ -442,7 +650,13 @@ def _dynamic_hp(spec: SolverSpec, problem: Problem, hp: Mapping) -> dict:
         k: float(v) for k, v in hp.items() if k not in spec.static_hp
     }
     if not spec.bake_lam:
-        dyn["lam"] = float(problem.lam)
+        # per-node lam stays an (N,) array in the data dtype (one traced
+        # signature); scalar lam stays a weak-typed python float
+        dyn["lam"] = (
+            float(problem.lam)
+            if np.ndim(problem.lam) == 0
+            else np.asarray(problem.lam, dtype=problem.data.val.dtype)
+        )
     return dyn
 
 
@@ -737,19 +951,24 @@ class _Recorder:
         self.consensus: list[float] = []
         self.zs: list[np.ndarray] | None = [] if keep_snapshots else None
 
-    def push(self, it: int, z) -> None:
+    def push(self, it: int, z, z_star=None) -> None:
         """Record consensus / distance-to-z* of iterates ``z`` at step ``it``.
 
         ``z`` is (N, D), or (B, N, D) for a batched ``solve_many`` run — the
-        metrics reduce over the trailing (N, D) axes either way.
+        metrics reduce over the trailing (N, D) axes either way. ``z_star``
+        overrides the recorder's reference root for this push — churn
+        phases measure dist2 against the CURRENT membership's own root
+        (only used when the recorder was built with a root at all, so
+        ``dist2`` stays rectangular).
         """
         z = np.asarray(z)
         zbar = z.mean(-2, keepdims=True)
         self.iters.append(it)
         self.consensus.append(np.mean(np.sum((z - zbar) ** 2, -1), -1))
         if self.z_star is not None:
+            ref = self.z_star if z_star is None else np.asarray(z_star)
             self.dist2.append(
-                np.mean(np.sum((z - self.z_star) ** 2, -1), -1)
+                np.mean(np.sum((z - ref) ** 2, -1), -1)
             )
         if self.zs is not None:
             self.zs.append(z)
@@ -777,6 +996,263 @@ class _Recorder:
             stack_metric(self.consensus),
             zs,
         )
+
+
+# ---------------------------------------------------------------------------
+# Dynamic networks: phase resolution for schedules and churn plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Phase:
+    """One static stretch of a dynamic run: fixed graph, W and membership.
+
+    ``entry`` says how the phase was entered (how to transform the carried
+    state at its start): None (run start), "switch" (new W, same
+    membership — state carried as-is, the restart-on-new-W argument),
+    "kill"/"join" (elastic remap via ``ft.elastic.ElasticGossip``).
+    ``row_map`` maps this phase's nodes into the global accounting rows
+    (N0 original nodes + one row per joined node); ``cols`` maps them
+    into the columns of the master (steps, N0) sample-index stream.
+    """
+
+    start: int
+    end: int
+    problem: Problem
+    entry: str | None
+    event: ChurnEvent | None
+    row_map: np.ndarray
+    cols: np.ndarray
+
+
+def _graph_fp(g: Graph | None):
+    """Value fingerprint of an optional graph (for the churn-child cache)."""
+    return None if g is None else (g.n, g.edges)
+
+
+def _w_fp(w) -> bytes | None:
+    """Value fingerprint of an optional mixing matrix."""
+    return None if w is None else np.ascontiguousarray(w).tobytes()
+
+
+def _churn_kill_child(problem: Problem, event: ChurnEvent):
+    """(survivor Problem, keep list) for a kill event; memoized on problem.
+
+    The child shares the parent's data arrays by slicing, so the runner
+    cache compiles the survivor system once per distinct event shape even
+    when the same plan replays across a sweep (children are memoized in
+    ``problem.__dict__`` keyed by the event's value fingerprint).
+    """
+    n = problem.graph.n
+    dead = sorted({int(x) for x in event.nodes})
+    for x in dead:
+        if not 0 <= x < n:
+            raise ValueError(
+                f"kill event names node {x} outside the current "
+                f"membership 0..{n - 1}"
+            )
+    if len(dead) >= n:
+        raise ValueError("kill event leaves no survivors")
+    keep = [i for i in range(n) if i not in set(dead)]
+    cache = problem.__dict__.setdefault("_churn_cache", {})
+    key = ("kill", tuple(dead), _graph_fp(event.graph), _w_fp(event.w))
+    if key not in cache:
+        g = event.graph
+        if g is None:
+            g = problem.graph.subgraph(keep)
+        if g.n != len(keep):
+            raise ValueError(
+                f"kill event graph has {g.n} nodes, {len(keep)} survive"
+            )
+        if not g.is_connected():
+            raise ValueError(
+                "survivor graph after kill is disconnected; pass "
+                "ChurnEvent(graph=...) with a connected replacement"
+            )
+        data = problem.data
+        ka = np.asarray(keep)
+        child_data = dataclasses.replace(
+            data, idx=data.idx[ka], val=data.val[ka], y=data.y[ka]
+        )
+        lam = problem.lam
+        if np.ndim(lam) > 0:
+            lam = np.asarray(lam)[ka]
+        child = Problem(
+            spec=problem.spec, data=child_data, graph=g, w=event.w, lam=lam
+        )
+        if problem.z_star is not None and np.ndim(lam) == 0:
+            child.solve_star()  # the survivor system's own root
+        cache[key] = child
+    return cache[key], keep
+
+
+def _churn_join_child(problem: Problem, event: ChurnEvent) -> Problem:
+    """Grown Problem for a join event; newcomers replicate ``seed_from``'s
+    data shard (the same seeding ``ElasticGossip.grow`` applies to state).
+    Memoized like the kill children.
+    """
+    n = problem.graph.n
+    sf = int(event.seed_from)
+    if not 0 <= sf < n:
+        raise ValueError(f"join seed_from {sf} outside membership 0..{n - 1}")
+    cache = problem.__dict__.setdefault("_churn_cache", {})
+    key = ("join", int(event.n_new), sf, _graph_fp(event.graph), _w_fp(event.w))
+    if key not in cache:
+        g = event.graph  # required (validated by ChurnEvent)
+        if g.n != n + event.n_new:
+            raise ValueError(
+                f"join event graph has {g.n} nodes, membership grows "
+                f"{n} -> {n + event.n_new}"
+            )
+        if not g.is_connected():
+            raise ValueError("graph after join is disconnected")
+        data = problem.data
+
+        def rep(a):
+            seed = np.broadcast_to(
+                a[sf][None], (event.n_new,) + a.shape[1:]
+            )
+            return np.concatenate([a, seed], axis=0)
+
+        child_data = dataclasses.replace(
+            data, idx=rep(data.idx), val=rep(data.val), y=rep(data.y)
+        )
+        lam = problem.lam
+        if np.ndim(lam) > 0:
+            lam = np.concatenate(
+                [np.asarray(lam), np.full(event.n_new, np.asarray(lam)[sf])]
+            )
+        child = Problem(
+            spec=problem.spec, data=child_data, graph=g, w=event.w, lam=lam
+        )
+        if problem.z_star is not None and np.ndim(lam) == 0:
+            child.solve_star()  # duplicated shards shift the global root
+        cache[key] = child
+    return cache[key]
+
+
+def _resolve_phases(
+    problem: Problem, steps: int, fault_plan
+) -> list[_Phase]:
+    """Split [0, steps) into static phases from a schedule or a fault plan.
+
+    A single static run is the degenerate one-phase case; ``solve()``
+    routes it through the ordinary static code path bit-for-bit.
+    """
+    n0 = problem.graph.n
+    rows = np.arange(n0)
+    if fault_plan is None:
+        segs = [s for s in problem.schedule if s[0] < steps]
+        phases = []
+        for k, (start, g, w) in enumerate(segs):
+            end = segs[k + 1][0] if k + 1 < len(segs) else steps
+            if g is problem.graph and w is problem.w:
+                child = problem
+            else:
+                child = dataclasses.replace(
+                    problem, graph=g, w=w, schedule=None
+                )
+            phases.append(
+                _Phase(
+                    start, end, child, None if k == 0 else "switch",
+                    None, rows, rows,
+                )
+            )
+        return phases
+
+    plan = fault_plan
+    if isinstance(plan, ChurnEvent):
+        plan = ChurnPlan((plan,))
+    elif isinstance(plan, (list, tuple)):
+        plan = ChurnPlan(tuple(plan))
+    if not isinstance(plan, ChurnPlan):
+        raise TypeError(
+            f"fault_plan must be a ChurnPlan / ChurnEvent(s), got "
+            f"{type(plan).__name__}"
+        )
+    for e in plan.events:
+        if not 0 < e.at < steps:
+            raise ValueError(
+                f"churn event at iteration {e.at} outside (0, {steps})"
+            )
+    phases = []
+    cur, cols, next_row = problem, np.arange(n0), n0
+    start, entry, ev = 0, None, None
+    for e in plan.events:
+        phases.append(_Phase(start, int(e.at), cur, entry, ev, rows, cols))
+        if e.kind == "kill":
+            cur, keep = _churn_kill_child(cur, e)
+            keep = np.asarray(keep)
+            rows, cols = rows[keep], cols[keep]
+        else:
+            cur = _churn_join_child(cur, e)
+            rows = np.concatenate(
+                [rows, np.arange(next_row, next_row + e.n_new)]
+            )
+            # newcomers replay seed_from's sample stream — consistent
+            # with their replicated data shard
+            cols = np.concatenate(
+                [cols, np.full(e.n_new, cols[int(e.seed_from)])]
+            )
+            next_row += e.n_new
+        start, entry, ev = int(e.at), e.kind, e
+    phases.append(_Phase(start, steps, cur, entry, ev, rows, cols))
+    return phases
+
+
+def _schedule_extras(phases: list[_Phase]) -> list[dict]:
+    """The per-phase record for ``SolveResult.extras["schedule"]``."""
+    return [
+        {
+            "start": ph.start,
+            "end": ph.end,
+            "n": ph.problem.graph.n,
+            "spectral_gap": spectral_gap(ph.problem.w),
+            "entry": ph.entry,
+        }
+        for ph in phases
+    ]
+
+
+def _elastic_remap(state, phase: _Phase, n_prev: int, spec: SolverSpec):
+    """Apply a phase's entry transform to the carried solver state.
+
+    Kill/join entries remap leading-N leaves through ``ElasticGossip``
+    and then apply the solver's ``reanchor`` hook: difference-form
+    methods conserve a mean-drift invariant whose level encodes the OLD
+    membership's mean operator — without re-running the t=0 anchor on
+    the survivors, the run stays pinned at the old system's root.
+    A "switch" entry carries state untouched (the invariant only uses
+    double stochasticity of W, which every segment satisfies).
+    """
+    if phase.entry not in ("kill", "join"):
+        return state  # "switch" carries state as-is (restart-on-new-W)
+    # lazy import: ft.elastic pulls in the training stack via core.gossip
+    from repro.core.gossip import GossipConfig
+    from repro.ft.elastic import ElasticGossip
+
+    eg = ElasticGossip(GossipConfig(n_pods=n_prev))
+    if phase.entry == "kill":
+        dead = sorted({int(x) for x in phase.event.nodes})
+        state, _ = eg.shrink(state, dead)
+    else:
+        state, _ = eg.grow(
+            state, int(phase.event.n_new), int(phase.event.seed_from)
+        )
+    if spec.reanchor is not None:
+        state = spec.reanchor(state)
+    return state
+
+
+def _rounds_at(spec: SolverSpec, hp: Mapping, t: int):
+    """Cumulative dense-exchange rounds per node after ``t`` global steps.
+
+    Global, not per-phase: solver step counters carry across phase
+    boundaries, so e.g. sliding's communication cadence is a function of
+    the global iteration. A phase's increment is the difference of this
+    at its endpoints.
+    """
+    return _cumulative_rounds(spec, hp, np.asarray([t]))[0]
 
 
 # ---------------------------------------------------------------------------
@@ -822,15 +1298,37 @@ def solve(
     comm_options: backend passthrough for ``comm="sparse"`` (``engine``,
         ``verify``, ``use_pallas``) and ``comm="sharded"`` (``mesh``, a
         prebuilt ``"node"``-axis mesh; defaults to
-        ``launch.mesh.make_node_mesh(N)``).
+        ``launch.mesh.make_node_mesh(N)``). ``comm="dense"``/``"sharded"``
+        additionally accept ``fault_plan`` (a ``ChurnPlan``): node churn
+        applied mid-run, for methods advertising ``supports_churn``.
     **hyperparams: solver hyperparameter overrides; the valid keys are the
         solver's ``defaults`` keys (anything else raises ``TypeError``).
     """
     spec = get_solver(method)
     if comm not in COMM_BACKENDS:
         raise ValueError(f"unknown comm backend {comm!r}; one of {COMM_BACKENDS}")
-    _check_capability(spec, comm, problem.spec.kind)
+    # peek fault_plan before schema validation so an unsupported (method,
+    # comm) x churn combination surfaces as the typed CapabilityError
+    fault_plan = (comm_options or {}).get("fault_plan")
+    multi = problem.schedule is not None and len(problem.schedule) > 1
+    if problem.schedule is not None and fault_plan is not None:
+        raise ValueError(
+            "a graph schedule and a fault_plan cannot be combined in one "
+            "run; encode the W changes as schedule segments instead"
+        )
+    _check_capability(
+        spec, comm, problem.spec.kind,
+        schedule=multi,
+        churn=fault_plan is not None,
+        per_node_lam=np.ndim(problem.lam) > 0,
+    )
     opts = _validate_options(comm, comm_options)
+    opts.pop("fault_plan", None)
+    if fault_plan is not None and keep_snapshots:
+        raise ValueError(
+            "keep_snapshots is unavailable with a fault_plan: snapshot "
+            "shapes change across churn events"
+        )
     if steps < 1:
         raise ValueError("steps must be >= 1")
     if record_every < 1:
@@ -858,10 +1356,27 @@ def solve(
             f"indices must be (>= steps, N) = (>={steps}, {n}), "
             f"got {indices.shape}"
         )
+    # dynamic-network resolution: a schedule or fault_plan becomes a list
+    # of static phases; the single-phase case routes through the ordinary
+    # static path below (bit-for-bit — only extras gains the segment log)
+    phases = None
+    sched_x = None
+    if problem.schedule is not None or fault_plan is not None:
+        phases = _resolve_phases(problem, steps, fault_plan)
+        sched_x = _schedule_extras(phases)
+        if len(phases) == 1:
+            problem = phases[0].problem
+            phases = None
+
     pts = _record_points(steps, record_every)
     rec = _Recorder(problem.z_star, keep_snapshots)
 
     if comm == "sparse":
+        if phases is not None:
+            return _solve_sparse_schedule(
+                spec, method, phases, hp, steps, pts, rec, indices, z0,
+                opts, sched_x,
+            )
         t0 = time.perf_counter()
         sres = spec.sparse_run(problem, hp, steps, indices, z0, opts)
         wall = time.perf_counter() - t0
@@ -869,6 +1384,12 @@ def solve(
             rec.push(pt, sres.z_trace[pt])
         iters, dist2, cons, zs = rec.arrays()
         sel = np.asarray(pts) - 1
+        extras = {
+            "z_trace": sres.z_trace,
+            "recon_max_err": sres.recon_max_err,
+        }
+        if sched_x is not None:
+            extras["schedule"] = sched_x
         return SolveResult(
             method=method,
             comm=comm,
@@ -881,10 +1402,13 @@ def solve(
             z=sres.z_trace[-1],
             state=None,
             zs=zs,
-            extras={
-                "z_trace": sres.z_trace,
-                "recon_max_err": sres.recon_max_err,
-            },
+            extras=extras,
+        )
+
+    if phases is not None:
+        return _solve_phased(
+            spec, method, comm, phases, hp, steps, pts, rec, indices, z0,
+            opts, sched_x,
         )
 
     if comm == "sharded":
@@ -912,6 +1436,12 @@ def solve(
         per_node = dense_doubles_per_iter(problem.graph, D)  # (N,)
         rounds = _cumulative_rounds(spec, hp, iters)
         doubles = rounds[:, None] * per_node[None, :]
+        extras = {
+            "collectives": costs,
+            "mesh_devices": int(mesh.shape["node"]),
+        }
+        if sched_x is not None:
+            extras["schedule"] = sched_x
         return SolveResult(
             method=method,
             comm=comm,
@@ -924,10 +1454,7 @@ def solve(
             z=np.asarray(z_final),
             state=state,
             zs=zs,
-            extras={
-                "collectives": costs,
-                "mesh_devices": int(mesh.shape["node"]),
-            },
+            extras=extras,
             # per-program measurement: collectives inside a traced-bound
             # inner loop (mudag's K gossip rounds) are counted once per
             # outer iteration — the modeled `doubles_received` carries the
@@ -974,6 +1501,197 @@ def solve(
         z=np.asarray(z_final),
         state=state,
         zs=zs,
+        extras={} if sched_x is None else {"schedule": sched_x},
+    )
+
+
+def _solve_phased(
+    spec, method, comm, phases, hp, steps, pts, rec, indices, z0, opts,
+    sched_x,
+) -> SolveResult:
+    """Dense/sharded execution of a multi-phase (dynamic-network) run.
+
+    Each phase runs through its own cached runner (edge colorings /
+    meshes re-derived per phase); the solver state is carried across
+    boundaries — as-is for a W switch (restart-on-new-W,
+    docs/algorithm.md), elastically remapped for churn. Communication
+    accounting folds per-phase increments into global per-row cumulative
+    counts: rows are the N0 original nodes plus one row per joined node
+    (``extras["churn_rows"]`` when membership changed).
+    """
+    t0 = time.perf_counter()
+    base = phases[0].problem
+    D = base.dim
+    total_rows = max(int(ph.row_map.max()) for ph in phases) + 1
+    record_set = set(pts)
+    cum = np.zeros(total_rows)
+    doubles_rows: list[np.ndarray] = []
+    measured: list[float] = []
+    measured_base = 0.0
+    costs0 = None
+    mesh_opt = opts.get("mesh")
+    mesh_devices = None
+    state = None
+    z_final = None
+    n_prev = base.graph.n
+    for ph in phases:
+        p = ph.problem
+        n_ph = p.graph.n
+        if state is not None:
+            state = _elastic_remap(state, ph, n_prev, spec)
+        if comm == "sharded":
+            if mesh_opt is not None and mesh_opt.shape["node"] == n_ph:
+                mesh = mesh_opt
+            else:
+                from repro.launch.mesh import make_node_mesh
+
+                mesh = make_node_mesh(n_ph)
+            runner = _get_sharded_runner(spec, p, hp, mesh)
+            if mesh_devices is None:
+                mesh_devices = int(mesh.shape["node"])
+        else:
+            runner = _get_dense_runner(spec, p, hp)
+        hp_dyn = _dynamic_hp(spec, p, hp)
+        if state is None:
+            state = runner.init(jnp.asarray(z0))
+            if comm == "dense" and runner.donates:
+                state = jax.tree_util.tree_map(
+                    lambda x: jnp.array(x, copy=True), state
+                )
+        per_node_ph = dense_doubles_per_iter(p.graph, D)  # (n_ph,)
+        rounds_start = _rounds_at(spec, hp, ph.start)
+        costs = None
+        marks = sorted(
+            {pt for pt in pts if ph.start < pt <= ph.end} | {ph.end}
+        )
+        prev = ph.start
+        for mk in marks:
+            idx_blk = jnp.asarray(
+                indices[prev:mk][:, ph.cols], jnp.int32
+            )
+            if comm == "sharded" and costs is None:
+                costs = runner.collective_costs(state, idx_blk, hp_dyn)
+                if costs0 is None:
+                    costs0 = costs
+            state = runner.chunk(state, idx_blk, hp_dyn)
+            prev = mk
+            if mk in record_set:
+                z_final = runner.z_read(state, hp_dyn)
+                rec.push(mk, z_final, z_star=p.z_star)
+                snap = cum.copy()
+                snap[ph.row_map] += (
+                    _rounds_at(spec, hp, mk) - rounds_start
+                ) * per_node_ph
+                doubles_rows.append(snap)
+                if comm == "sharded":
+                    measured.append(
+                        measured_base
+                        + (mk - ph.start) * costs["bytes_per_iter"]
+                    )
+        cum[ph.row_map] += (
+            _rounds_at(spec, hp, ph.end) - rounds_start
+        ) * per_node_ph
+        if comm == "sharded":
+            measured_base += (ph.end - ph.start) * costs["bytes_per_iter"]
+        n_prev = n_ph
+    wall = time.perf_counter() - t0
+    iters, dist2, cons, zs = rec.arrays()
+    doubles = np.stack(doubles_rows)
+    extras: dict = {"schedule": sched_x}
+    if total_rows != base.graph.n or any(
+        ph.entry in ("kill", "join") for ph in phases
+    ):
+        extras["churn_rows"] = total_rows
+    if comm == "sharded":
+        extras["collectives"] = costs0
+        extras["mesh_devices"] = mesh_devices
+    return SolveResult(
+        method=method,
+        comm=comm,
+        iters=iters,
+        dist2=dist2,
+        consensus=cons,
+        doubles_received=doubles,
+        ints_received=np.zeros_like(doubles),
+        wall_time=wall,
+        z=np.asarray(z_final),
+        state=state,
+        zs=zs,
+        extras=extras,
+        measured_collective_bytes=(
+            np.asarray(measured) if comm == "sharded" else None
+        ),
+    )
+
+
+def _solve_sparse_schedule(
+    spec, method, phases, hp, steps, pts, rec, indices, z0, opts, sched_x,
+) -> SolveResult:
+    """Sparse-relay execution of a graph schedule: chained segment runs.
+
+    Each segment re-derives the relay protocol (reconstruction waves,
+    broadcast trees) for its own graph; the solver state chains through
+    ``SparseRunResult.state`` -> the next segment's ``state0`` (the
+    restart path charges the extra z0-resync flood —
+    ``core.sparse_comm``). Message accounting concatenates with each
+    segment offset by the previous segment's final cumulative counts.
+    """
+    t0 = time.perf_counter()
+    st = None
+    z_traces = []
+    doubles_parts, ints_parts = [], []
+    d_off = i_off = 0  # int: keeps the concatenated counts integer-typed
+    recon = []
+    for k, ph in enumerate(phases):
+        seg_steps = ph.end - ph.start
+        o = dict(opts)
+        if k == 0:
+            sres = spec.sparse_run(
+                ph.problem, hp, seg_steps,
+                indices[ph.start:ph.end], z0, o,
+            )
+        else:
+            o["state0"] = st
+            sres = spec.sparse_run(
+                ph.problem, hp, seg_steps,
+                indices[ph.start:ph.end], None, o,
+            )
+        st = sres.state
+        z_traces.append(sres.z_trace if k == 0 else sres.z_trace[1:])
+        doubles_parts.append(sres.doubles_received + d_off)
+        ints_parts.append(sres.ints_received + i_off)
+        d_off = doubles_parts[-1][-1]
+        i_off = ints_parts[-1][-1]
+        recon.append(sres.recon_max_err)
+    wall = time.perf_counter() - t0
+    z_trace = np.concatenate(z_traces)  # (steps + 1, N, D)
+    doubles_all = np.concatenate(doubles_parts)  # (steps, N) cumulative
+    ints_all = np.concatenate(ints_parts)
+    rc = np.asarray(recon, dtype=np.float64)
+    recon_max = (
+        float(np.nanmax(rc)) if not np.all(np.isnan(rc)) else float("nan")
+    )
+    for pt in pts:
+        rec.push(pt, z_trace[pt])
+    iters, dist2, cons, zs = rec.arrays()
+    sel = np.asarray(pts) - 1
+    return SolveResult(
+        method=method,
+        comm="sparse",
+        iters=iters,
+        dist2=dist2,
+        consensus=cons,
+        doubles_received=doubles_all[sel],
+        ints_received=ints_all[sel],
+        wall_time=wall,
+        z=z_trace[-1],
+        state=None,
+        zs=zs,
+        extras={
+            "z_trace": z_trace,
+            "recon_max_err": recon_max,
+            "schedule": sched_x,
+        },
     )
 
 
@@ -1032,8 +1750,21 @@ def solve_many(
     spec = get_solver(method)
     if comm not in COMM_BACKENDS:
         raise ValueError(f"unknown comm backend {comm!r}; one of {COMM_BACKENDS}")
-    _check_capability(spec, comm, problem.spec.kind)
+    fault_plan = (comm_options or {}).get("fault_plan")
+    if problem.schedule is not None and fault_plan is not None:
+        raise ValueError(
+            "a graph schedule and a fault_plan cannot be combined in one run"
+        )
+    _check_capability(
+        spec, comm, problem.spec.kind,
+        schedule=problem.schedule is not None and len(problem.schedule) > 1,
+        churn=fault_plan is not None,
+        per_node_lam=np.ndim(problem.lam) > 0,
+    )
     _validate_options(comm, comm_options)
+    # dynamic-network runs are per-entry sequential: the vmapped batched
+    # paths assume one static (graph, W, membership) for the whole scan
+    dynamic = problem.schedule is not None or fault_plan is not None
     if grid is None and seeds is None:
         raise ValueError("solve_many needs a grid, seeds, or both")
     entries = [dict(e) for e in grid] if grid is not None else None
@@ -1063,7 +1794,7 @@ def solve_many(
     idx_b = _sweep_indices(indices, n_runs, steps, n, q, seeds_list)
 
     ragged = any(k in spec.static_hp for e in entries for k in e)
-    if comm == "sparse" and not ragged:
+    if comm == "sparse" and not ragged and not dynamic:
         res = _solve_many_sparse_batched(
             problem, method, spec, steps=steps, record_every=record_every,
             z0=z0, keep_snapshots=keep_snapshots, comm_options=comm_options,
@@ -1071,7 +1802,7 @@ def solve_many(
         )
         if res is not None:
             return res
-    if comm != "dense" or ragged:
+    if comm != "dense" or ragged or dynamic:
         return _solve_many_sequential(
             problem, method, comm, steps=steps, record_every=record_every,
             z0=z0, keep_snapshots=keep_snapshots, comm_options=comm_options,
@@ -1101,7 +1832,11 @@ def solve_many(
         for k in dyn_names if k != "lam"
     }
     if "lam" in dyn_names:
-        hp_dyn["lam"] = float(problem.lam)
+        hp_dyn["lam"] = (
+            float(problem.lam)
+            if np.ndim(problem.lam) == 0
+            else np.asarray(problem.lam, dtype=dt)
+        )
 
     state0 = runner.init(jnp.asarray(z0))
     state = jax.tree_util.tree_map(
@@ -1354,6 +2089,21 @@ def _make_dsba_family(method: str, default_alpha: float) -> SolverSpec:
         # SAGA table stores scalars for any linear-predictor operator,
         # including the bilinear saddle family (resolvent in closed form)
         problem_families=FAMILIES,
+        # the fixed point z* = consensus root is W-independent and the
+        # state is all leading-N leaves -> schedules, churn and per-node
+        # regularization are all sound (docs/algorithm.md, docs/solvers.md)
+        supports_schedule=True,
+        supports_churn=True,
+        supports_per_node_lam=True,
+        # after a churn remap, re-enter the t=0 branch: the t>=1
+        # difference recursion is stationary at ANY consensus point with
+        # settled tables — only the step-0 psi (-alpha*phibar injection)
+        # targets the new membership's root. Warm tables and iterates
+        # are kept; phibar rows are node-local, so slicing/padding them
+        # is exact (docs/algorithm.md).
+        reanchor=lambda st: dataclasses.replace(
+            st, step=jnp.zeros((), jnp.int32)
+        ),
     )
 
 
@@ -1753,6 +2503,11 @@ register_solver(
         # saddle families (auc, bilinear) are excluded by capability
         problem_families=MINIMIZATION_FAMILIES,
         comm_rounds=_mudag_rounds,
+        # gradient tracking preserves mean(s) = mean(g) under ANY doubly
+        # stochastic W, and the FastMix weight is re-baked per segment
+        # runner — schedules are sound; churn is not (the tracker's
+        # telescoped history refers to departed nodes' gradients)
+        supports_schedule=True,
     )
 )
 register_solver(
@@ -1764,6 +2519,7 @@ register_solver(
         defaults={"alpha": 0.1, "comm_period": 4},
         problem_families=MINIMIZATION_FAMILIES,
         comm_rounds=_sliding_rounds,
+        supports_schedule=True,  # tracking is W-agnostic (see mudag)
     )
 )
 
@@ -1866,5 +2622,114 @@ register_solver(
         # descent-ascent targets the saddle families; the convex tasks
         # already have the full stochastic family (dsba/dsa)
         problem_families=("auc", "bilinear"),
+        supports_schedule=True,  # tracking is W-agnostic (see mudag)
+    )
+)
+
+
+# ---------------------------------------------------------------------------
+# Registry entry: personalized consensus-regularized descent
+# ---------------------------------------------------------------------------
+
+
+def _personal_init(problem, hp, z0):
+    """Personalized-descent state: just the iterate block."""
+    return (jnp.asarray(z0),)
+
+
+def _personal_step(problem, hp, comm):
+    """Consensus-regularized personalization (per-node lam, mu-coupling).
+
+    Each node keeps its OWN solution of its locally regularized problem,
+    coupled to its neighbors only through the graph-Laplacian penalty
+    (mu/2) <Z, L Z>: the fixed point solves
+
+        G_n(z_n) + lam_n z_n + mu (L Z)_n = 0      for every node n,
+
+    the consensus-regularized personalization system (mu -> inf recovers
+    exact consensus, mu = 0 fully local models). Plain forward descent on
+    this monotone map — the point here is the problem geometry (per-node
+    lam on non-iid shards), not acceleration. ``lam`` arrives traced and
+    may be an (N,) array; the column reshape makes both shapes broadcast
+    against the (N, D) iterate block.
+    """
+    feats, labels = _dense_setup(problem)
+    G = _full_operator(problem.spec, feats, labels, comm)
+    dt = feats.dtype
+    lap_mix = comm.matvec(problem.graph.laplacian, dt)
+
+    def step(carry, i_t, hp_run):
+        alpha, mu, lam = hp_run["alpha"], hp_run["mu"], hp_run["lam"]
+        (z,) = carry
+        lam_col = lam[:, None] if jnp.ndim(lam) > 0 else lam
+        g = G(z, 0.0) + lam_col * z
+        return (z - alpha * (g + mu * lap_mix(z)),)
+
+    return step
+
+
+def personalized_root(
+    problem: Problem, mu: float = 1.0, iters: int = 100, tol: float = 1e-12
+) -> np.ndarray:
+    """(N, D) root of the consensus-regularized personalization system.
+
+    Damped Newton on the stacked map F(Z) = G(Z) + lam .* Z + mu L Z —
+    the per-node-lam counterpart of ``Problem.solve_star()`` (which has
+    no single centralized root to offer when lam varies per node). Use
+    the SAME ``mu`` as the ``personal`` solver run being measured.
+    """
+    n, D = problem.graph.n, problem.dim
+    comm = DenseComm(problem.graph)
+    feats = jnp.asarray(problem.data.dense())
+    labels = jnp.asarray(problem.data.y)
+    dt = feats.dtype
+    G = _full_operator(problem.spec, feats, labels, comm)
+    lap = jnp.asarray(problem.graph.laplacian, dt)
+    lam = problem.lam
+    lam_col = (
+        jnp.asarray(np.asarray(lam)[:, None], dt)
+        if np.ndim(lam) > 0 else float(lam)
+    )
+
+    def F(zf):
+        Z = zf.reshape(n, D)
+        out = G(Z, 0.0) + lam_col * Z + mu * (lap @ Z)
+        return out.reshape(-1)
+
+    jacF = jax.jacfwd(F)
+    z = jnp.zeros((n * D,), dt)
+    eye = jnp.eye(n * D, dtype=dt)
+    for _ in range(iters):
+        f = F(z)
+        nf = float(jnp.linalg.norm(f))
+        if nf < tol:
+            break
+        delta = jnp.linalg.solve(jacF(z) + 1e-12 * eye, f)
+        t = 1.0
+        z_try = z - delta
+        for _ in range(30):  # backtracking damping
+            z_try = z - t * delta
+            if float(jnp.linalg.norm(F(z_try))) <= (1.0 - 0.25 * t) * nf:
+                break
+            t *= 0.5
+        z = z_try
+    return np.asarray(z).reshape(n, D)
+
+
+register_solver(
+    SolverSpec(
+        name="personal",
+        init=_personal_init,
+        step=_personal_step,
+        z_of=lambda problem, hp, comm: lambda state, hp_run: state[0],
+        defaults={"alpha": 0.2, "mu": 1.0},
+        # forward descent needs a monotone minimization operator; the
+        # saddle families couple blocks the Laplacian penalty ignores
+        problem_families=MINIMIZATION_FAMILIES,
+        # dense-only: an (N,) lam under shard_map would broadcast the
+        # whole vector to every device block instead of its own entry
+        supports_sharded=False,
+        supports_schedule=True,
+        supports_per_node_lam=True,
     )
 )

@@ -101,6 +101,7 @@ class SparseRunResult:
     doubles_received: np.ndarray  # (T, N) cumulative DOUBLEs per node
     ints_received: np.ndarray  # (T, N) cumulative index ints per node
     recon_max_err: float  # max |reconstruction - truth|; nan unless verified
+    state: object | None = None  # final solver state (schedule chaining)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,7 +141,8 @@ def _protocol_tables(graph: Graph, wt: np.ndarray) -> _Tables:
 
 
 def _closed_form_costs(
-    nnz_log: np.ndarray, dist: np.ndarray, tail: int, d_total: int
+    nnz_log: np.ndarray, dist: np.ndarray, tail: int, d_total: int,
+    restart: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Cumulative (doubles, ints) per node from the per-iteration nnz log.
 
@@ -148,6 +150,12 @@ def _closed_form_costs(
     iteration tau + xi(u, l); the dense z^1 flood (d_total doubles) arrives
     exactly at t == xi. Equivalent to the reference engine's in-loop
     accounting, but one vectorized pass over the (T, N, N) arrival grid.
+
+    ``restart=True`` (a schedule-segment resync) charges a SECOND dense
+    flood at t == xi: after a graph change the segment-entry iterates z^0
+    are node-private (unlike the consensus-shared initializer of a fresh
+    run), so they must be flooded alongside z^1 before any delta-based
+    reconstruction can proceed.
     """
     steps, n = nnz_log.shape
     ts = np.arange(steps)[:, None, None]  # (T, 1, 1)
@@ -158,7 +166,8 @@ def _closed_form_costs(
     nnz = nnz_log[np.clip(t_src, 0, None), src]  # (T, obs, src)
     ints_inc = np.where(arrived, nnz, 0).sum(axis=2)
     doubles_inc = np.where(arrived, nnz + tail, 0).sum(axis=2)
-    doubles_inc += d_total * ((ts == xi) & (xi > 0)).sum(axis=2)
+    floods = 2 if restart else 1
+    doubles_inc += floods * d_total * ((ts == xi) & (xi > 0)).sum(axis=2)
     return np.cumsum(doubles_inc, axis=0), np.cumsum(ints_inc, axis=0)
 
 
@@ -171,6 +180,7 @@ def run_sparse(
     indices: np.ndarray,
     z0: np.ndarray | None = None,
     *,
+    state0=None,
     engine: str = "vectorized",
     verify: bool = False,
     use_pallas: str = "auto",
@@ -185,16 +195,26 @@ def run_sparse(
         (compiled on TPU, interpret=True fallback elsewhere); "on" forces the
         compiled kernel, "interpret" forces interpret mode, and "off" uses a
         plain jnp scatter (fastest to trace on CPU).
+    state0: carried DSBAState from a previous schedule segment. When given,
+        the run is a RESTART on (possibly new) `graph`/`w`: the solver
+        continues from state0 (its SAGA tables, deltas and step counter
+        intact), the t=0 mixing is ``w_tilde(w) @ (2 z - z_prev)`` from the
+        carried iterates, and the segment-entry z^0 is flooded densely
+        alongside z^1 (charged in the accounting — see _closed_form_costs).
+        ``z0`` must be None in that case.
     """
     if steps < 1:
         raise ValueError("steps must be >= 1")
+    if state0 is not None and z0 is not None:
+        raise ValueError("pass either z0 (fresh start) or state0 (restart)")
     if engine == "reference":
-        return _run_reference(cfg, data, graph, w, steps, indices, z0)
+        return _run_reference(cfg, data, graph, w, steps, indices, z0,
+                              state0=state0)
     if engine != "vectorized":
         raise ValueError(f"unknown engine {engine!r}")
     return _run_vectorized(
-        cfg, data, graph, w, steps, indices, z0, verify=verify,
-        use_pallas=use_pallas,
+        cfg, data, graph, w, steps, indices, z0, state0=state0,
+        verify=verify, use_pallas=use_pallas,
     )
 
 
@@ -403,12 +423,21 @@ def _build_sparse_scan(cfg, data, graph, w, *, verify, kernel_mode):
     return jax.jit(scan_all), tb
 
 
-def _relay_carry0(cfg, data, z0, depth, verify):
-    """The relay scan's initial carry at the shared starting point ``z0``."""
+def _relay_carry0(cfg, data, z0, depth, verify, state0=None):
+    """The relay scan's initial carry at the shared starting point ``z0``.
+
+    With ``state0`` (a schedule-segment restart) the carried solver state is
+    used as-is and the reconstruction ring is seeded with its iterates: the
+    segment-entry z^0 := state0.z is flooded at segment start (see
+    _closed_form_costs), so every observer's store legitimately holds it.
+    """
     n = data.n_nodes
     D = data.d + cfg.spec.tail_dim
     dt = data.val.dtype
-    state0 = init_state(cfg, data, jnp.asarray(z0))
+    if state0 is not None:
+        z0 = state0.z
+    else:
+        state0 = init_state(cfg, data, jnp.asarray(z0))
     R0 = jnp.zeros((depth, n, n, D), dt)
     R0 = R0.at[0].set(jnp.broadcast_to(jnp.asarray(z0, dt), (n, n, D)))
     DD0 = jnp.zeros((depth, n, D), dt)
@@ -440,14 +469,18 @@ def _resolve_kernel_mode(use_pallas: str) -> str:
 
 
 def _run_vectorized(
-    cfg, data, graph, w, steps, indices, z0, *, verify, use_pallas
+    cfg, data, graph, w, steps, indices, z0, *, state0=None, verify,
+    use_pallas
 ) -> SparseRunResult:
     spec = cfg.spec
     n = data.n_nodes
     tail = spec.tail_dim
     D = data.d + tail
     dt = data.val.dtype
-    if z0 is None:
+    restart = state0 is not None
+    if restart:
+        z0 = np.asarray(state0.z)
+    elif z0 is None:
         z0 = np.zeros((n, D), dtype=dt)
 
     # This path follows the protocol spec rather than kernels.ops "auto"
@@ -465,13 +498,21 @@ def _run_vectorized(
     )
     depth, dmax = tb.depth, tb.dmax
 
-    carry0 = _relay_carry0(cfg, data, z0, depth, verify)
+    carry0 = _relay_carry0(cfg, data, z0, depth, verify, state0=state0)
     ts = jnp.arange(steps, dtype=jnp.int32)
     idx_j = jnp.asarray(indices[:steps], jnp.int32)
-    mix0 = jnp.asarray(w @ z0, dt)  # t=0 mixing: z^0 is consensus-shared
+    if restart:
+        # carried state: step > 0 routes through the eq. 29 psi path, whose
+        # t=0 mixing is W~ against (2 z - z_prev) of the carried iterates
+        mix0 = jnp.asarray(
+            w_tilde(w) @ (2.0 * np.asarray(state0.z)
+                          - np.asarray(state0.z_prev)), dt
+        )
+    else:
+        mix0 = jnp.asarray(w @ z0, dt)  # t=0: z^0 is consensus-shared
     hp = {"alpha": float(cfg.alpha), "lam": float(cfg.lam)}
 
-    (_, _, _, _, _, _, err, ok), (zs, nnzs) = scan(
+    (state_f, _, _, _, _, _, err, ok), (zs, nnzs) = scan(
         carry0, (ts, idx_j), mix0, hp
     )
 
@@ -481,13 +522,14 @@ def _run_vectorized(
         )
     z_trace = np.concatenate([np.asarray(z0)[None], np.asarray(zs)])
     doubles, ints = _closed_form_costs(
-        np.asarray(nnzs), tb.dist, tail, D
+        np.asarray(nnzs), tb.dist, tail, D, restart=restart
     )
     return SparseRunResult(
         z_trace=z_trace,
         doubles_received=doubles,
         ints_received=ints,
         recon_max_err=float(err) if verify else float("nan"),
+        state=state_f,
     )
 
 
@@ -592,7 +634,7 @@ def run_sparse_many(
 # ---------------------------------------------------------------------------
 
 def _run_reference(
-    cfg, data, graph, w, steps, indices, z0=None
+    cfg, data, graph, w, steps, indices, z0=None, state0=None
 ) -> SparseRunResult:
     spec = cfg.spec
     alpha, lam = cfg.alpha, cfg.lam
@@ -602,14 +644,17 @@ def _run_reference(
     d = data.d
     D = d + tail
     dt = data.val.dtype
-    if z0 is None:
+    restart = state0 is not None
+    if restart:
+        z0 = np.asarray(state0.z)
+    elif z0 is None:
         z0 = np.zeros((n, D), dtype=dt)
 
     dist = np.stack([graph.distances_from(u) for u in range(n)])  # (N, N)
     wt = w_tilde(w)
     neighbors = {u: sorted(graph.neighbors(u)) for u in range(n)}
 
-    state = init_state(cfg, data, jnp.asarray(z0))
+    state = state0 if restart else init_state(cfg, data, jnp.asarray(z0))
     step_fn = jax.jit(make_step_fn(cfg, data, w))
 
     # --- per-observer reconstruction stores ---------------------------------
@@ -671,6 +716,8 @@ def _run_reference(
                     if t == xi:
                         recon[u, l, 1] = z_hist[1, l]
                         doubles[t, u] += D  # one-time dense z^1 flood
+                        if restart:
+                            doubles[t, u] += D  # z^0 resync flood
                     if t - xi >= 0:
                         nnz = int((dval_log[t - xi, l] != 0).sum())
                         doubles[t, u] += nnz + tail
@@ -692,7 +739,12 @@ def _run_reference(
                         s_next[u, l] = s + 1
 
         # ---- mixing rows from each node's OWN reconstruction store --------
-        if t == 0:
+        if t == 0 and restart:
+            # carried state: the eq. 29 psi path mixes W~ against
+            # (2 z - z_prev) of the carried iterates
+            mix = wt @ (2.0 * np.asarray(state0.z)
+                        - np.asarray(state0.z_prev))
+        elif t == 0:
             mix = w @ z_hist[0]  # z^0 is consensus-shared; local compute
         else:
             mix = np.zeros((n, D), dtype=dt)
@@ -731,6 +783,7 @@ def _run_reference(
         doubles_received=np.cumsum(doubles, axis=0),
         ints_received=np.cumsum(ints, axis=0),
         recon_max_err=recon_err,
+        state=state,
     )
 
 

@@ -138,6 +138,47 @@ def make_classification(
     return SparseDataset(i, v, yy, d)
 
 
+def make_noniid_regression(
+    n_nodes: int = 10,
+    q: int = 50,
+    d: int = 64,
+    k: int = 8,
+    shift: float = 1.0,
+    noise: float = 0.1,
+    seed: int = 0,
+    dtype=np.float64,
+) -> tuple[SparseDataset, np.ndarray]:
+    """Deliberately non-iid splits: node n's labels come from its OWN model.
+
+    Per-node ground truth w*_n = w_shared + shift * delta_n with delta_n a
+    unit-norm node-specific direction, and each node samples its q rows
+    locally (no global shuffle): the node marginals differ in both the
+    label model and the draw. ``shift`` interpolates from the iid setting
+    (0.0) to fully heterogeneous nodes. This is the personalization
+    testbed: a single consensus model underfits every node, while per-node
+    regularization (``Problem.lam`` as an (N,) array) trades local fit
+    against consensus coupling.
+
+    Returns ``(dataset, w_stars)`` with ``w_stars`` of shape (N, d) so
+    tests can measure per-node excess risk against the true local models.
+    """
+    rng = np.random.default_rng(seed)
+    w_shared = rng.standard_normal(d).astype(dtype)
+    idx = np.empty((n_nodes, q, k), dtype=np.int32)
+    val = np.empty((n_nodes, q, k), dtype=dtype)
+    y = np.empty((n_nodes, q), dtype=dtype)
+    w_stars = np.empty((n_nodes, d), dtype=dtype)
+    for n in range(n_nodes):
+        delta = rng.standard_normal(d).astype(dtype)
+        delta /= np.linalg.norm(delta)
+        w_stars[n] = w_shared + shift * delta
+        i_n, v_n = _sparse_rows(rng, q, d, k, dtype)
+        u = np.einsum("qk,qk->q", v_n, w_stars[n][i_n])
+        idx[n], val[n] = i_n, v_n
+        y[n] = u + noise * rng.standard_normal(q).astype(dtype)
+    return SparseDataset(idx, val, y, d), w_stars
+
+
 def from_preset(
     name: str, task: str = "classification", n_nodes: int = 10,
     q: int = 100, seed: int = 0

@@ -32,23 +32,35 @@ class HeartbeatMonitor:
         self.timeout = timeout
         self.last_seen = {p: 0 for p in range(n_pods)}
         self.tick_now = 0
+        self.declared_dead: set[int] = set()
 
     def heartbeat(self, pod: int):
         self.last_seen[pod] = self.tick_now
+        self.declared_dead.discard(pod)  # a live heartbeat resurrects
 
     def tick(self) -> list[int]:
-        """Advance time; returns list of pods declared DEAD this tick."""
+        """Advance time; returns pods declared DEAD *this* tick.
+
+        Each death is reported exactly once: a pod stays in `last_seen`
+        (so a late heartbeat can resurrect it) but moves into
+        `declared_dead` so subsequent ticks stop re-reporting it.
+        """
         self.tick_now += 1
-        return [
+        dead = [
             p for p, t in self.last_seen.items()
             if self.tick_now - t >= self.timeout
+            and p not in self.declared_dead
         ]
+        self.declared_dead.update(dead)
+        return dead
 
     def remove(self, pod: int):
         self.last_seen.pop(pod, None)
+        self.declared_dead.discard(pod)
 
     def add(self, pod: int):
         self.last_seen[pod] = self.tick_now
+        self.declared_dead.discard(pod)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,120 @@
+"""Multi-device tier: dynamic networks under the sharded backend, 8 devices.
+
+The churn leg of the dynamic-network contract (tests/test_dynamic_graphs.py
+covers the single-device legs): a mid-run shrink 8 -> 6 re-meshes the
+sharded runner onto the survivor device set, with per-step parity against
+the dense reference, and a graph schedule re-derives its edge colorings per
+segment on the same mesh. Run via tests/test_sharded.py (forced host
+devices); collected single-device, everything here skips.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs >= 8 devices (run via tests/test_sharded.py)",
+)
+
+N = 8
+
+
+def _problem():
+    from repro.core import mixing
+    from repro.core.solvers import make_problem
+    from repro.data.synthetic import make_regression
+
+    data = make_regression(N, 12, 6, k=4, seed=0)
+    return make_problem("ridge", data, mixing.ring_graph(N), lam=1e-2)
+
+
+def test_single_segment_schedule_bit_equal_static_sharded():
+    """The third backend's leg of the bit-equality contract (dense and
+    sparse run in tests/test_dynamic_graphs.py)."""
+    from repro.core.solvers import solve
+
+    problem = _problem()
+    problem.solve_star()
+    ps = dataclasses.replace(problem, schedule=((0, problem.graph),))
+    kw = dict(steps=20, record_every=5, seed=1, alpha=0.05)
+    r0 = solve(problem, "dsba", comm="sharded", **kw)
+    r1 = solve(ps, "dsba", comm="sharded", **kw)
+    assert np.array_equal(np.asarray(r0.z), np.asarray(r1.z))  # BIT equal
+    assert np.array_equal(np.asarray(r0.dist2), np.asarray(r1.dist2))
+    np.testing.assert_array_equal(
+        r0.measured_collective_bytes, r1.measured_collective_bytes
+    )
+
+
+@pytest.mark.parametrize("method", ["dsba", "dsa"])
+def test_sharded_churn_shrink_8_to_6_matches_dense(method):
+    """Kill two nodes mid-run: the sharded run re-meshes onto 6 devices and
+    stays in 1e-12 parity with the dense run, before and after the event."""
+    from repro.core.solvers import ChurnEvent, ChurnPlan, solve
+
+    problem = _problem()
+    problem.solve_star()
+    plan = ChurnPlan((ChurnEvent(at=10, kind="kill", nodes=(6, 7)),))
+    kw = dict(steps=24, record_every=4, seed=1, alpha=0.05,
+              comm_options={"fault_plan": plan})
+    rd = solve(problem, method, comm="dense", **kw)
+    rs = solve(problem, method, comm="sharded", **kw)
+    assert rs.z.shape == (6, rd.z.shape[1])
+    np.testing.assert_allclose(
+        np.asarray(rs.z), np.asarray(rd.z), atol=1e-12, rtol=0
+    )
+    np.testing.assert_allclose(
+        np.asarray(rs.dist2), np.asarray(rd.dist2), atol=1e-12, rtol=1e-9
+    )
+    assert rs.extras["mesh_devices"] == N  # first phase's mesh
+    assert rs.extras["churn_rows"] == N
+    # modeled accounting identical across backends; measured bytes recorded
+    np.testing.assert_array_equal(rd.doubles_received, rs.doubles_received)
+    mb = np.asarray(rs.measured_collective_bytes)
+    assert mb.shape == rs.iters.shape and (np.diff(mb) > 0).all()
+
+
+def test_sharded_churn_reconverges_on_survivors():
+    """Longer horizon: the survivor system's root is actually reached
+    (the reanchored state targets the NEW membership, not the stale one)."""
+    from repro.core import mixing
+    from repro.core.solvers import ChurnEvent, ChurnPlan, make_problem, solve
+
+    problem = _problem()
+    plan = ChurnPlan((ChurnEvent(at=100, kind="kill", nodes=(6, 7)),))
+    r = solve(problem, "dsba", comm="sharded", steps=1500, record_every=500,
+              seed=1, comm_options={"fault_plan": plan})
+    data = problem.data
+    cdata = dataclasses.replace(
+        data, idx=data.idx[:6], val=data.val[:6], y=data.y[:6]
+    )
+    child = make_problem("ridge", cdata, problem.graph.subgraph(range(6)),
+                         lam=1e-2)
+    zc = child.solve_star()
+    assert float(np.mean(np.sum((np.asarray(r.z) - zc) ** 2, -1))) < 1e-9
+
+
+def test_sharded_schedule_matches_dense_across_switch():
+    """Two segments, same membership: each segment's edge coloring is
+    re-derived on the same 8-device mesh; dense parity holds throughout."""
+    from repro.core import mixing
+    from repro.core.solvers import solve
+
+    problem = _problem()
+    problem.solve_star()
+    g2 = mixing.erdos_renyi_graph(N, 0.4, seed=1)
+    ps = dataclasses.replace(problem, schedule=((0, problem.graph), (12, g2)))
+    kw = dict(steps=24, record_every=4, seed=1, alpha=0.05)
+    rd = solve(ps, "dsba", comm="dense", **kw)
+    rs = solve(ps, "dsba", comm="sharded", **kw)
+    np.testing.assert_allclose(
+        np.asarray(rs.z), np.asarray(rd.z), atol=1e-12, rtol=0
+    )
+    np.testing.assert_allclose(
+        np.asarray(rs.dist2), np.asarray(rd.dist2), atol=1e-12, rtol=1e-9
+    )
+    gaps = [s["spectral_gap"] for s in rs.extras["schedule"]]
+    assert len(gaps) == 2 and all(g > 0 for g in gaps)

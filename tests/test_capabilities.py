@@ -80,7 +80,91 @@ def test_matrix_agrees_with_advertised_support_counts():
         for m in METHODS for c in COMMS for f in FAMILIES
     )
     total = len(METHODS) * len(COMMS) * len(FAMILIES)
-    assert total == 64
+    assert total == 72
     # dense: dsba/dsa 4 families each, extra/dlm 3, ssda/mudag/sliding 2,
-    # dsgda 2 -> 22; sparse: dsba/dsa only -> 8
-    assert supported == 30
+    # dsgda 2, personal 2 -> 24; sparse: dsba/dsa only -> 8
+    assert supported == 32
+
+
+# ---------------------------------------------------------------------------
+# dynamic-network axes: schedule / churn / per-node lam
+# ---------------------------------------------------------------------------
+# The same no-third-outcome rule covers the dynamic axes: a method that does
+# not advertise the capability refuses with a typed CapabilityError naming
+# the exact (method, comm, family) triple BEFORE any factory or compile runs
+# — never a silent fall-back to the static run.
+
+def _two_ring_schedule():
+    import dataclasses
+
+    g = mixing.ring_graph(N)
+    g2 = mixing.complete_graph(N)
+    return dataclasses.replace(_problem("ridge"), schedule=((0, g), (3, g2)))
+
+
+def test_schedule_on_unsupporting_method_raises_before_factory():
+    problem = _two_ring_schedule()
+    for method in METHODS:
+        caps = available_solvers()[method]
+        if caps.supports_schedule or not caps.supports("dense", "ridge"):
+            continue
+        with pytest.raises(CapabilityError) as ei:
+            solve(problem, method, comm="dense", steps=6, record_every=3,
+                  seed=0, **HP.get(method, {}))
+        assert (ei.value.method, ei.value.comm, ei.value.family) == (
+            method, "dense", "ridge")
+
+
+def test_churn_on_unsupporting_method_raises_before_factory():
+    from repro.core.solvers import ChurnEvent, ChurnPlan
+
+    plan = ChurnPlan((ChurnEvent(at=3, kind="kill", nodes=(3,)),))
+    problem = _problem("ridge")
+    for method in METHODS:
+        caps = available_solvers()[method]
+        if caps.supports_churn or not caps.supports("dense", "ridge"):
+            continue
+        with pytest.raises(CapabilityError) as ei:
+            solve(problem, method, comm="dense", steps=6, record_every=3,
+                  seed=0, comm_options={"fault_plan": plan},
+                  **HP.get(method, {}))
+        assert (ei.value.method, ei.value.comm, ei.value.family) == (
+            method, "dense", "ridge")
+
+
+def test_churn_under_sparse_comm_raises():
+    """The delta relay's protocol tables cover the whole graph: no churn."""
+    from repro.core.solvers import ChurnEvent, ChurnPlan
+
+    plan = ChurnPlan((ChurnEvent(at=3, kind="kill", nodes=(3,)),))
+    with pytest.raises(CapabilityError) as ei:
+        solve(_problem("ridge"), "dsba", comm="sparse", steps=6,
+              record_every=3, seed=0, comm_options={"fault_plan": plan})
+    assert (ei.value.method, ei.value.comm) == ("dsba", "sparse")
+
+
+def test_per_node_lam_outside_dense_raises():
+    import dataclasses
+
+    problem = dataclasses.replace(
+        _problem("ridge"), lam=np.full(N, 1e-2), z_star=None)
+    for comm in ("sparse", "sharded"):
+        with pytest.raises(CapabilityError) as ei:
+            solve(problem, "dsba", comm=comm, steps=6, record_every=3, seed=0)
+        assert (ei.value.method, ei.value.comm) == ("dsba", comm)
+
+
+def test_per_node_lam_on_unsupporting_method_raises():
+    import dataclasses
+
+    problem = dataclasses.replace(
+        _problem("ridge"), lam=np.full(N, 1e-2), z_star=None)
+    for method in METHODS:
+        caps = available_solvers()[method]
+        if caps.supports_per_node_lam or not caps.supports("dense", "ridge"):
+            continue
+        with pytest.raises(CapabilityError) as ei:
+            solve(problem, method, comm="dense", steps=6, record_every=3,
+                  seed=0, **HP.get(method, {}))
+        assert (ei.value.method, ei.value.comm, ei.value.family) == (
+            method, "dense", "ridge")

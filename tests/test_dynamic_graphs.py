@@ -1,0 +1,378 @@
+"""Dynamic networks: time-varying graph schedules, node churn, personalization.
+
+The tentpole contract (docs/solvers.md "Dynamic networks"):
+
+- a ``Problem.schedule`` of (start_iter, Graph/W) segments runs each segment
+  through its own cached runner, carrying solver state across boundaries
+  (restart-on-new-W, docs/algorithm.md) and recording per-segment spectral
+  gaps in ``SolveResult.extras["schedule"]``;
+- a ``ChurnPlan`` via ``comm_options={"fault_plan": ...}`` kills/joins nodes
+  mid-run through ``ElasticGossip`` state remapping + the solver's reanchor
+  hook, after which the run reconverges geometrically on the new membership;
+- a single-segment schedule is BIT-equal to the static path — the dynamic
+  machinery must cost exactly nothing when the network never changes.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import mixing
+from repro.core.solvers import (
+    ChurnEvent,
+    ChurnPlan,
+    make_problem,
+    personalized_root,
+    solve,
+)
+from repro.data.synthetic import make_noniid_regression, make_regression
+
+
+def _ridge(n=6, seed=3, lam=0.3, graph=None):
+    data = make_regression(n_nodes=n, q=12, d=12, k=4, seed=seed)
+    return make_problem("ridge", data, graph or mixing.ring_graph(n), lam=lam)
+
+
+def _flip_edge(g):
+    """Replace ring edge (0,1) with chord (0,3): same nodes, new topology."""
+    edges = tuple(e for e in g.edges if e != (0, 1)) + ((0, 3),)
+    g2 = mixing.Graph(g.n, tuple(sorted(edges)))
+    assert g2.is_connected()
+    return g2
+
+
+# ---------------------------------------------------------------------------
+# single-segment schedules are bit-equal to the static path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["dsba", "dsa", "mudag"])
+def test_single_segment_schedule_bit_equal_static_dense(method):
+    p = _ridge()
+    p.solve_star()
+    ps = dataclasses.replace(p, schedule=((0, p.graph),))
+    kw = dict(steps=60, record_every=20, seed=0)
+    r0 = solve(p, method, "dense", **kw)
+    r1 = solve(ps, method, "dense", **kw)
+    assert np.array_equal(np.asarray(r0.z), np.asarray(r1.z))  # BIT equal
+    assert np.array_equal(np.asarray(r0.dist2), np.asarray(r1.dist2))
+    assert np.array_equal(r0.doubles_received, r1.doubles_received)
+    # the only trace of the schedule is its extras record
+    assert len(r1.extras["schedule"]) == 1
+    assert r1.extras["schedule"][0]["entry"] is None
+
+
+@pytest.mark.parametrize("engine", ["reference", "vectorized"])
+def test_single_segment_schedule_bit_equal_static_sparse(engine):
+    p = _ridge()
+    p.solve_star()
+    ps = dataclasses.replace(p, schedule=((0, p.graph),))
+    kw = dict(steps=40, record_every=20, seed=0,
+              comm_options={"engine": engine})
+    r0 = solve(p, "dsba", "sparse", **kw)
+    r1 = solve(ps, "dsba", "sparse", **kw)
+    assert np.array_equal(np.asarray(r0.z), np.asarray(r1.z))
+    assert np.array_equal(r0.doubles_received, r1.doubles_received)
+    assert np.array_equal(r0.ints_received, r1.ints_received)
+
+
+# ---------------------------------------------------------------------------
+# multi-segment schedules: state carries, per-segment gaps recorded
+# ---------------------------------------------------------------------------
+
+def test_schedule_extras_record_per_segment_gaps():
+    p = _ridge()
+    g2 = _flip_edge(p.graph)
+    ps = dataclasses.replace(p, schedule=((0, p.graph), (20, g2)))
+    r = solve(ps, "dsba", "dense", steps=50, record_every=10, seed=0)
+    segs = r.extras["schedule"]
+    assert [s["start"] for s in segs] == [0, 20]
+    assert [s["end"] for s in segs] == [20, 50]
+    assert segs[0]["entry"] is None and segs[1]["entry"] == "switch"
+    np.testing.assert_allclose(
+        segs[0]["spectral_gap"],
+        mixing.spectral_gap(mixing.laplacian_mixing(p.graph)),
+    )
+    np.testing.assert_allclose(
+        segs[1]["spectral_gap"],
+        mixing.spectral_gap(mixing.laplacian_mixing(g2)),
+    )
+    assert all(s["spectral_gap"] > 0 for s in segs)
+
+
+@pytest.mark.parametrize("method", ["dsba", "dsa"])
+def test_schedule_switch_converges_to_root(method):
+    """Carried state across a W switch still reaches the (W-independent)
+    root: the mean-drift invariant only uses double stochasticity."""
+    p = _ridge()
+    p.solve_star()
+    g2 = _flip_edge(p.graph)
+    ps = dataclasses.replace(p, schedule=((0, p.graph), (150, g2), (400, p.graph)))
+    r = solve(ps, method, "dense", steps=2500, record_every=250, seed=0)
+    assert float(r.dist2[-1]) < 1e-18
+
+
+def test_schedule_reference_vs_vectorized_relay_across_edge_flip():
+    """The sparse relay re-derives its reconstruction waves at the boundary:
+    the vectorized engine must track the per-edge oracle across the flip."""
+    p = _ridge()
+    p.solve_star()
+    ps = dataclasses.replace(p, schedule=((0, p.graph), (25, _flip_edge(p.graph))))
+    kw = dict(steps=60, record_every=20, seed=0)
+    rr = solve(ps, "dsba", "sparse", comm_options={"engine": "reference"}, **kw)
+    rv = solve(ps, "dsba", "sparse",
+               comm_options={"engine": "vectorized", "verify": True}, **kw)
+    np.testing.assert_allclose(
+        np.asarray(rv.z), np.asarray(rr.z), atol=1e-12, rtol=0
+    )
+    assert float(rv.extras["recon_max_err"]) < 1e-10
+    # cumulative accounting stays monotone across the boundary
+    assert (np.diff(rv.doubles_received, axis=0) >= 0).all()
+    assert (np.diff(rv.ints_received, axis=0) >= 0).all()
+
+
+def test_sparse_schedule_restart_charges_extra_flood():
+    """A segment boundary re-floods dense iterates once: the schedule run
+    moves strictly more doubles than the static run, same step count."""
+    p = _ridge()
+    ps = dataclasses.replace(p, schedule=((0, p.graph), (25, _flip_edge(p.graph))))
+    kw = dict(steps=50, record_every=50, seed=0,
+              comm_options={"engine": "vectorized"})
+    r0 = solve(p, "dsba", "sparse", **kw)
+    r1 = solve(ps, "dsba", "sparse", **kw)
+    assert r1.doubles_received[-1].sum() > r0.doubles_received[-1].sum()
+
+
+# ---------------------------------------------------------------------------
+# node churn: kill / join mid-run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["dsba", "dsa"])
+def test_kill_resumes_geometric_decay_on_survivor_ring(method):
+    """Acceptance: after a mid-run kill, the survivor-ring run reaches
+    dist2 <= 1e-9 of the SURVIVOR system's root (not the stale parent's)."""
+    p = _ridge(n=6)
+    p.solve_star()
+    plan = ChurnPlan((ChurnEvent(at=300, kind="kill", nodes=(4, 5)),))
+    r = solve(p, method, "dense", steps=2500, record_every=100, seed=0,
+              comm_options={"fault_plan": plan})
+    # survivor ground truth: nodes 0..3 on the induced ring
+    cdata = dataclasses.replace(
+        p.data, idx=p.data.idx[:4], val=p.data.val[:4], y=p.data.y[:4]
+    )
+    child = make_problem("ridge", cdata, p.graph.subgraph([0, 1, 2, 3]),
+                         lam=0.3)
+    zc = child.solve_star()
+    assert r.z.shape == (4, zc.shape[-1])
+    assert float(np.mean(np.sum((np.asarray(r.z) - zc) ** 2, -1))) < 1e-9
+    # recorded dist2 switches to the survivor root at the kill and decays
+    # geometrically afterwards (factor >= 10 per 500 iters here)
+    post = np.asarray(r.dist2)[np.asarray(r.iters) > 300]
+    assert post[-1] < 1e-9
+    assert post[-1] < post[0] * 1e-6
+    # accounting: dead nodes' rows freeze, survivors' keep growing
+    rows = r.extras["churn_rows"]
+    assert rows == 6
+    d = r.doubles_received
+    assert d.shape[1] == 6
+    frozen = d[np.asarray(r.iters) > 300][:, 4:]
+    assert (np.diff(frozen, axis=0) == 0).all()
+    live = d[:, :4]
+    assert (np.diff(live, axis=0) > 0).all()
+
+
+@pytest.mark.parametrize("method", ["dsba", "dsa"])
+def test_join_pulls_new_nodes_into_consensus(method):
+    p = _ridge(n=6)
+    plan = ChurnPlan((
+        ChurnEvent(at=300, kind="join", n_new=2, seed_from=0,
+                   graph=mixing.ring_graph(8)),
+    ))
+    r = solve(p, method, "dense", steps=3000, record_every=100, seed=0,
+              comm_options={"fault_plan": plan})
+    assert r.z.shape[0] == 8
+    # the joined nodes are in consensus with the incumbents...
+    z = np.asarray(r.z)
+    assert float(np.max(np.sum((z - z.mean(0)) ** 2, -1))) < 1e-16
+    # ...at the GROWN system's root (joined nodes replicate node 0's shard)
+    gdata = dataclasses.replace(
+        p.data,
+        idx=np.concatenate([p.data.idx, p.data.idx[[0, 0]]]),
+        val=np.concatenate([p.data.val, p.data.val[[0, 0]]]),
+        y=np.concatenate([p.data.y, p.data.y[[0, 0]]]),
+    )
+    grown = make_problem("ridge", gdata, mixing.ring_graph(8), lam=0.3)
+    zg = grown.solve_star()
+    assert float(np.mean(np.sum((z - zg) ** 2, -1))) < 1e-9
+
+
+def test_kill_then_join_sequence():
+    """A plan with several events chains children; joined node seeds from a
+    SURVIVOR index (post-kill numbering)."""
+    p = _ridge(n=6)
+    plan = ChurnPlan((
+        ChurnEvent(at=200, kind="kill", nodes=(5,)),
+        ChurnEvent(at=500, kind="join", n_new=1, seed_from=2,
+                   graph=mixing.ring_graph(6)),
+    ))
+    r = solve(p, "dsba", "dense", steps=2000, record_every=200, seed=0,
+              comm_options={"fault_plan": plan})
+    assert r.z.shape[0] == 6
+    assert r.extras["churn_rows"] == 7  # 6 original + 1 joined
+    segs = r.extras["schedule"]
+    assert [s["entry"] for s in segs] == [None, "kill", "join"]
+    z = np.asarray(r.z)
+    assert float(np.max(np.sum((z - z.mean(0)) ** 2, -1))) < 1e-16
+
+
+def test_fault_plan_validation():
+    p = _ridge(n=6)
+    with pytest.raises(ValueError, match="strictly increase"):
+        ChurnPlan((ChurnEvent(at=5, kind="kill", nodes=(1,)),
+                   ChurnEvent(at=5, kind="kill", nodes=(2,))))
+    with pytest.raises(ValueError, match="graph"):
+        ChurnEvent(at=5, kind="join", n_new=1)  # join needs the new graph
+    # killing nodes that disconnect the default survivor subgraph
+    plan = ChurnPlan((ChurnEvent(at=5, kind="kill", nodes=(1, 4)),))
+    with pytest.raises(ValueError, match="connect"):
+        solve(p, "dsba", "dense", steps=10, record_every=5, seed=0,
+              comm_options={"fault_plan": plan})
+    # schedule and fault_plan cannot be combined
+    ps = dataclasses.replace(p, schedule=((0, p.graph), (5, p.graph)))
+    okplan = ChurnPlan((ChurnEvent(at=5, kind="kill", nodes=(5,)),))
+    with pytest.raises(ValueError, match="schedule"):
+        solve(ps, "dsba", "dense", steps=10, record_every=5, seed=0,
+              comm_options={"fault_plan": okplan})
+
+
+# ---------------------------------------------------------------------------
+# elastic remap invariants (deterministic twins of the hypothesis tests)
+# ---------------------------------------------------------------------------
+
+def test_shrink_grow_roundtrip_shapes_and_seeding():
+    from repro.core.gossip import GossipConfig
+    from repro.ft.elastic import ElasticGossip
+
+    rng = np.random.default_rng(0)
+    state = {
+        "z": rng.standard_normal((6, 4)),
+        "table": rng.standard_normal((6, 3, 2)),
+        "scalar": np.float64(7.0),
+        "step": np.int32(11),
+    }
+    eg = ElasticGossip(GossipConfig(n_pods=6))
+    small, gc4 = eg.shrink(state, dead=[1, 4])
+    assert gc4.n_pods == 4
+    assert small["z"].shape == (4, 4) and small["table"].shape == (4, 3, 2)
+    np.testing.assert_array_equal(np.asarray(small["z"])[0], state["z"][0])
+    np.testing.assert_array_equal(np.asarray(small["z"])[1], state["z"][2])
+    assert small["scalar"] == state["scalar"]  # non-node leaves untouched
+    back, gc6 = ElasticGossip(gc4).grow(small, n_new=2, seed_from=3)
+    assert gc6.n_pods == 6
+    for k in ("z", "table"):
+        assert np.asarray(back[k]).shape == np.asarray(state[k]).shape
+        np.testing.assert_array_equal(  # joined rows replicate the seed
+            np.asarray(back[k])[4], np.asarray(back[k])[3]
+        )
+
+
+def test_segment_mixing_matrices_valid():
+    """Every normalized segment W is doubly stochastic, supported on its
+    graph, and has positive spectral gap (connected segments only)."""
+    p = _ridge()
+    g2 = _flip_edge(p.graph)
+    ps = dataclasses.replace(p, schedule=((0, p.graph), (20, g2)))
+    for _, g, w in ps.schedule:
+        mixing.validate_mixing(w, g)
+        np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-10)
+        np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-10)
+        assert mixing.spectral_gap(w) > 0
+
+
+# ---------------------------------------------------------------------------
+# personalization: per-node lam on deliberately non-iid splits
+# ---------------------------------------------------------------------------
+
+def test_per_node_lam_dsba_dsa_agree_on_noniid_data():
+    """Two different methods, one coupled fixed point: per-node lam enters
+    the problem, not the solver."""
+    data, _ = make_noniid_regression(n_nodes=6, q=20, d=16, k=5, shift=1.5,
+                                     seed=0)
+    lam = np.linspace(0.05, 0.4, 6)
+    p = make_problem("ridge", data, mixing.ring_graph(6), lam=lam)
+    ra = solve(p, "dsba", "dense", steps=2500, record_every=500, seed=0)
+    rb = solve(p, "dsa", "dense", steps=2500, record_every=500, seed=0)
+    za, zb = np.asarray(ra.z), np.asarray(rb.z)
+    np.testing.assert_allclose(za, zb, atol=1e-8, rtol=0)
+    assert float(np.max(np.sum((za - za.mean(0)) ** 2, -1))) < 1e-16
+
+
+def test_personalized_root_matches_personal_descent():
+    data, _ = make_noniid_regression(n_nodes=5, q=16, d=12, k=4, shift=1.0,
+                                     seed=1)
+    lam = np.full(5, 0.2)
+    p = make_problem("ridge", data, mixing.ring_graph(5), lam=lam)
+    zp = personalized_root(p, mu=1.0)
+    r = solve(p, "personal", "dense", steps=8000, record_every=2000, seed=0,
+              mu=1.0)
+    np.testing.assert_allclose(np.asarray(r.z), zp, atol=1e-10, rtol=0)
+
+
+def test_personalization_interpolates_local_to_consensus():
+    """mu -> 0 decouples the nodes (local ridge fits); mu large approaches
+    consensus. Local training residual is monotone in mu on non-iid data."""
+    data, _ = make_noniid_regression(n_nodes=5, q=16, d=12, k=4, shift=2.0,
+                                     seed=2)
+    lam = np.full(5, 0.2)
+    p = make_problem("ridge", data, mixing.ring_graph(5), lam=lam)
+
+    def local_sse(z):
+        a = data.dense()  # (N, q, d)
+        pred = np.einsum("nqd,nd->nq", a, np.asarray(z))
+        return float(((pred - data.y) ** 2).sum())
+
+    def spread(z):
+        z = np.asarray(z)
+        return float(np.max(np.sum((z - z.mean(0)) ** 2, -1)))
+
+    sse, sp = {}, {}
+    for mu in (0.01, 1.0, 100.0):
+        z = personalized_root(p, mu=mu)
+        sse[mu], sp[mu] = local_sse(z), spread(z)
+    assert sse[0.01] < sse[1.0] < sse[100.0]  # local fit degrades with mu
+    assert sp[0.01] > sp[1.0] > sp[100.0]  # spread contracts toward consensus
+
+
+# ---------------------------------------------------------------------------
+# exhaustive sweeps (slow tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["dsba", "dsa", "mudag", "sliding"])
+@pytest.mark.parametrize("n_segments", [2, 4, 7])
+def test_schedule_sweep_every_method_converges(method, n_segments):
+    p = _ridge(n=6)
+    p.solve_star()
+    graphs = [p.graph, _flip_edge(p.graph),
+              mixing.complete_graph(6), mixing.erdos_renyi_graph(6, 0.5, 9)]
+    sched = tuple(
+        (120 * i, graphs[i % len(graphs)]) for i in range(n_segments)
+    )
+    ps = dataclasses.replace(p, schedule=sched)
+    r = solve(ps, method, "dense", steps=4000, record_every=1000, seed=0)
+    assert float(r.dist2[-1]) < 1e-15
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("at", [50, 299, 300, 301, 777])
+def test_kill_timing_sweep(at):
+    p = _ridge(n=6)
+    plan = ChurnPlan((ChurnEvent(at=at, kind="kill", nodes=(4, 5)),))
+    r = solve(p, "dsba", "dense", steps=at + 2200, record_every=200, seed=0,
+              comm_options={"fault_plan": plan})
+    cdata = dataclasses.replace(
+        p.data, idx=p.data.idx[:4], val=p.data.val[:4], y=p.data.y[:4]
+    )
+    child = make_problem("ridge", cdata, p.graph.subgraph([0, 1, 2, 3]),
+                         lam=0.3)
+    zc = child.solve_star()
+    assert float(np.mean(np.sum((np.asarray(r.z) - zc) ** 2, -1))) < 1e-9

@@ -26,6 +26,36 @@ def test_heartbeat_detects_dead_pod():
     assert dead == [2]
 
 
+def test_heartbeat_reports_each_death_exactly_once():
+    """Regression: tick() used to re-report already-dead pods every tick,
+    so a supervisor driving ElasticGossip.shrink off the tick() list would
+    shrink the same pod twice."""
+    hb = HeartbeatMonitor(3, timeout=2)
+
+    def tick_with_live(n=1):
+        out = []
+        for _ in range(n):
+            hb.heartbeat(0)
+            hb.heartbeat(1)  # pod 2 silent
+            out = hb.tick()
+        return out
+
+    assert tick_with_live(2) == [2]
+    assert tick_with_live() == []  # already reported: stays silent
+    assert tick_with_live() == []
+    # a late heartbeat resurrects the pod...
+    hb.heartbeat(2)
+    assert tick_with_live() == []
+    # ...and a NEW silence is reported again (exactly once)
+    assert tick_with_live() == [2]
+    assert tick_with_live() == []
+    # explicit re-add after removal also re-arms reporting
+    hb.remove(2)
+    hb.add(2)
+    assert tick_with_live() == []
+    assert tick_with_live() == [2]
+
+
 def _setup(n_pods=4):
     cfg = dataclasses.replace(get_reduced("minitron_8b"), n_layers=1)
     tc = TrainConfig(optimizer=AdamConfig(lr=1e-2, warmup_steps=1))

@@ -1,4 +1,5 @@
 """Hypothesis property tests on system-wide invariants."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -118,6 +119,77 @@ def test_ce_loss_nonnegative_and_bounded_for_uniform(v, s, seed):
     np.testing.assert_allclose(l, np.log(v), rtol=1e-6)
     logits2 = jnp.asarray(rng.standard_normal((1, s, v)))
     assert float(ce_loss(logits2, targets)) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# dynamic networks: segment mixing matrices + elastic state remapping
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.floats(0.3, 0.9), st.integers(0, 50))
+def test_generated_segment_w_doubly_stochastic_supported_gapped(n, p, seed):
+    """Any Graph segment a schedule normalizes: its W is doubly stochastic,
+    supported on the graph, and (connected by construction) has gap > 0."""
+    import dataclasses
+
+    from repro.core.solvers import make_problem
+
+    g = mixing.erdos_renyi_graph(n, p, seed=seed)
+    data = make_regression(n, 4, 8, k=3, seed=seed)
+    prob = make_problem("ridge", data, mixing.ring_graph(n) if n > 1 else g,
+                        lam=1e-2)
+    prob = dataclasses.replace(prob, schedule=((0, g),))
+    ((_, gg, w),) = prob.schedule
+    mixing.validate_mixing(w, gg)
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-9)
+    assert mixing.spectral_gap(w) > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(3, 9),
+    st.lists(st.integers(0, 8), min_size=1, max_size=3, unique=True),
+    st.integers(0, 30),
+)
+def test_elastic_shrink_grow_roundtrips_pytree_shapes(n, dead, seed):
+    """shrink(dead) then grow(len(dead)) restores every leaf's shape for an
+    arbitrary pytree: leading-n leaves remap, the rest pass through."""
+    from repro.ft.elastic import ElasticGossip
+
+    dead = sorted(d for d in set(dead) if d < n)
+    if len(dead) >= n:
+        return  # need at least one survivor
+    rng = np.random.default_rng(seed)
+    state = {
+        "z": jnp.asarray(rng.standard_normal((n, 3))),
+        "nested": {"table": jnp.asarray(rng.standard_normal((n, 2, 2)))},
+        "per_node_flat": jnp.asarray(rng.standard_normal(n)),
+        "scalar": jnp.asarray(3.5),
+        "step": jnp.asarray(7, jnp.int32),
+        "not_node_axis": jnp.asarray(rng.standard_normal((n + 1, 2))),
+    }
+    eg = ElasticGossip(GossipConfig(n_pods=n))
+    small, gc_s = eg.shrink(state, dead=dead)
+    keep = [i for i in range(n) if i not in dead]
+    assert gc_s.n_pods == len(keep)
+    for kk, leaf in (("z", state["z"]),
+                     ("nested", state["nested"]["table"]),
+                     ("per_node_flat", state["per_node_flat"])):
+        got = small[kk]["table"] if kk == "nested" else small[kk]
+        src = np.asarray(leaf)
+        np.testing.assert_array_equal(np.asarray(got), src[keep])
+    back, gc_b = ElasticGossip(gc_s).grow(small, n_new=len(dead), seed_from=0)
+    assert gc_b.n_pods == n
+    flat0, _ = jax.tree_util.tree_flatten(state)
+    flat1, _ = jax.tree_util.tree_flatten(back)
+    for a, b in zip(flat0, flat1):
+        assert np.asarray(a).shape == np.asarray(b).shape
+    # non-node leaves survive both remaps bit-identically
+    np.testing.assert_array_equal(
+        np.asarray(back["not_node_axis"]), np.asarray(state["not_node_axis"])
+    )
+    assert int(back["step"]) == 7
 
 
 # ---------------------------------------------------------------------------

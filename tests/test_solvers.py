@@ -56,7 +56,8 @@ def _problem(task, gname="erdos_renyi", n_nodes=5, q=6, d=16, k=4, lam=1e-2,
 def test_registry_exposes_capability_records():
     avail = available_solvers()
     assert set(avail) == {
-        "dsba", "dsa", "extra", "dlm", "ssda", "mudag", "sliding", "dsgda"
+        "dsba", "dsa", "extra", "dlm", "ssda", "mudag", "sliding", "dsgda",
+        "personal",
     }
     assert all(isinstance(c, SolverCapabilities) for c in avail.values())
     # sparse comm: the stochastic family only (the paper's relay broadcasts
@@ -64,9 +65,28 @@ def test_registry_exposes_capability_records():
     assert {n: c.supports_sparse_comm for n, c in avail.items()} == {
         "dsba": True, "dsa": True, "extra": False, "dlm": False,
         "ssda": False, "mudag": False, "sliding": False, "dsgda": False,
+        "personal": False,
     }
     # every registered step is written against comm.matvec/comm.local
-    assert all(c.supports_sharded for c in avail.values())
+    # (personal is the one dense-only entry: its fixed point is
+    # non-consensus, so per-device leading-axis sharding does not apply)
+    assert all(c.supports_sharded for n, c in avail.items()
+               if n != "personal")
+    assert not avail["personal"].supports_sharded
+    # the dynamic-network axes (PR 8): schedules for the W-independent
+    # fixed points, churn only where elastic remap + reanchor is sound,
+    # per-node lam only for the resolvent/forward families that take it
+    assert {n: c.supports_schedule for n, c in avail.items()} == {
+        "dsba": True, "dsa": True, "extra": False, "dlm": False,
+        "ssda": False, "mudag": True, "sliding": True, "dsgda": True,
+        "personal": True,
+    }
+    assert {n for n, c in avail.items() if c.supports_churn} == {
+        "dsba", "dsa"
+    }
+    assert {n for n, c in avail.items() if c.supports_per_node_lam} == {
+        "dsba", "dsa", "personal"
+    }
     # the problem-family axis: the paper's scalar-table machinery covers
     # every linear-predictor family incl. the bilinear saddle; descent-only
     # methods are minimization-only; descent-ascent is saddle-only
