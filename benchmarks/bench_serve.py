@@ -1,0 +1,83 @@
+"""Serving throughput: continuous-batching decode at batch 1/64/512.
+
+Measures the steady-state decode loop of ``repro.serve.Scheduler`` on
+the reduced minitron config — the scheduler admits `batch` requests,
+the pool fills, and we time warm fixed-shape decode steps (everything
+jitted is already traced; the host side does admission bookkeeping +
+argmax sampling).  Entries report us per decode step; the derived
+column carries tokens/sec and pool occupancy.
+
+All ``serve_*`` entries are informational in the regression gate:
+container-timed CPU wall-clock of a whole serving step (device decode
++ host scheduler) is too noisy across runners to gate at 1.5x.
+
+    PYTHONPATH=src python -m benchmarks.run --bench-group serve
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+BATCHES = (1, 64, 512)
+
+
+def measure(batches=BATCHES, fast=False):
+    """Returns one record per batch size: us/step, tok/s, occupancy."""
+    from repro.configs import get_reduced
+    from repro.models import transformer as T
+    from repro.models.params import tree_materialize
+    from repro.serve import PoolConfig, Request, Scheduler
+
+    cfg = get_reduced("minitron_8b")
+    params = tree_materialize(
+        T.model_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype
+    )
+    warmup, timed = (1, 4) if fast else (2, 16)
+    records = []
+    for batch in batches:
+        pc = PoolConfig(
+            max_batch=batch, block_size=16, n_blocks=2 * batch + 2,
+            max_len=32, prompt_pad=16,
+        )
+        sch = Scheduler(cfg, params, pc)
+        rng = np.random.default_rng(0)
+        for i in range(batch):
+            plen = int(rng.integers(3, 9))
+            sch.submit(Request(
+                rid=i, tokens=rng.integers(0, cfg.vocab_size, size=plen),
+                max_new_tokens=warmup + timed + 4,
+            ))
+        t0 = time.perf_counter()
+        sch.step()  # admits the whole batch (prefills) + first decode
+        admit_s = time.perf_counter() - t0
+        for _ in range(warmup):
+            sch.step()
+        t0 = time.perf_counter()
+        for _ in range(timed):
+            stats = sch.step()
+            assert stats.tokens_generated == batch
+        dt = time.perf_counter() - t0
+        records.append({
+            "batch": batch,
+            "us_per_step": dt / timed * 1e6,
+            "tok_s": batch * timed / dt,
+            "occupancy": sch.pool.occupancy(),
+            "admit_s": admit_s,
+            "traces": dict(sch.trace_counts),
+        })
+    return records
+
+
+def main():
+    for r in measure():
+        print(
+            f"batch={r['batch']:4d}  {r['us_per_step']:10.1f} us/step  "
+            f"{r['tok_s']:8.1f} tok/s  occupancy={r['occupancy']:.2f}  "
+            f"admit={r['admit_s']:.2f}s  traces={r['traces']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,8 @@ their forward twins).
                latency + batched solve_many)
   convergence  solve() entrypoint timings (`solve_*`) + the paper's
                convergence/communication tables
+  serve        continuous-batching decode throughput at batch 1/64/512
+               (`serve_*`, informational — container-timed)
   all          everything (default)
 """
 from __future__ import annotations
@@ -303,17 +305,51 @@ def bench_comm_sharded(rows, fast):
         ))
 
 
+def bench_serve(rows, fast):
+    """Continuous-batching serving throughput (bench-group ``serve``).
+
+    Tokens/sec through the paged-cache scheduler at batch 1/64/512
+    (benchmarks/bench_serve.py). ALL ``serve_*`` entries are tagged
+    informational in the JSON payload: a serving step times device
+    decode plus host scheduler bookkeeping, too container-noisy for
+    the 1.5x gate.
+    """
+    from benchmarks import bench_serve as BS
+
+    for r in BS.measure(fast=fast):
+        rows.append((
+            f"serve_decode_b{r['batch']}", r["us_per_step"],
+            f"{r['tok_s']:.1f} tok/s occupancy={r['occupancy']:.2f} "
+            f"admit={r['admit_s'] * 1e3:.0f}ms",
+        ))
+
+
+def informational_entries(rows) -> list[str]:
+    """Entries compare.py reports but never gates: mesh-backend rows mix
+    modeled and measured communication, the PR 7 rows (bilinear figure,
+    mudag-vs-dsa round ratio) report convergence facts rather than
+    latencies, and the serving rows time host scheduler + device decode
+    in one container-noisy number."""
+    return sorted(
+        name for name, _, _ in rows
+        if name.startswith(("comm_sharded_", "paper_accel_", "serve_"))
+        or name == "paper_fig_bilinear"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument(
         "--bench-group",
-        choices=("kernels", "sweep", "convergence", "comm-sharded", "all"),
+        choices=("kernels", "sweep", "convergence", "comm-sharded", "serve",
+                 "all"),
         default="all",
         help="kernels = dsba/kernel-fwd+bwd/gossip/sweep timings (what CI "
              "gates); sweep = just the sweep-engine entries; convergence = "
              "the paper's convergence + communication tables; comm-sharded "
-             "= the node-mesh scaling sweep (informational entries)",
+             "= the node-mesh scaling sweep (informational entries); serve "
+             "= continuous-batching decode throughput (informational)",
     )
     ap.add_argument(
         "--json", default=None, metavar="PATH",
@@ -336,6 +372,8 @@ def main():
         bench_convergence_tables(rows, args.fast)
     if args.bench_group in ("comm-sharded", "all"):
         bench_comm_sharded(rows, args.fast)
+    if args.bench_group in ("serve", "all"):
+        bench_serve(rows, args.fast)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
@@ -350,15 +388,7 @@ def main():
             "fast": bool(args.fast),
             "entries": {name: round(us, 1) for name, us, _ in rows},
             "derived": {name: derived for name, _, derived in rows},
-            # mesh-backend entries mix modeled and measured communication,
-            # and the PR 7 rows (bilinear figure, mudag-vs-dsa round ratio)
-            # report convergence facts, not latencies; compare.py reports
-            # all of these but never gates on them
-            "informational": sorted(
-                name for name, _, _ in rows
-                if name.startswith(("comm_sharded_", "paper_accel_"))
-                or name == "paper_fig_bilinear"
-            ),
+            "informational": informational_entries(rows),
         }
         pathlib.Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
         print(f"wrote {args.json}")

@@ -1,21 +1,21 @@
-"""Batched serving driver: prefill a batch of prompts, then decode tokens.
+"""Batched serving example: prefill a batch of prompts, then decode.
 
-Exercises the real serving path (KV/SSM caches, prefill -> incremental
-decode) on any assigned architecture's reduced config:
+A thin driver over ``repro.serve.engine.generate`` — the shared
+prefill + incremental-decode loop (contiguous caches, one jitted step).
+For continuous batching over the paged cache pool, see
+``launch/serve.py``.
 
     PYTHONPATH=src python examples/serve_decode.py --arch mamba2-1.3b
     PYTHONPATH=src python examples/serve_decode.py --arch gemma2-2b --tokens 32
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ALIASES, get_reduced
 from repro.models import transformer as T
 from repro.models.params import tree_materialize
+from repro.serve import generate
 
 
 def main():
@@ -30,49 +30,29 @@ def main():
     cfg = get_reduced(args.arch)
     params = tree_materialize(T.model_defs(cfg), jax.random.PRNGKey(0),
                               cfg.param_dtype)
-    key = jax.random.PRNGKey(1)
     prompts = jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size,
     )
-    max_len = args.prompt_len + args.tokens
-    cache = T.init_cache(cfg, args.batch, max_len)
+    enc = None
     if cfg.family == "encdec":
         enc = jax.random.normal(
             jax.random.PRNGKey(2), (args.batch, cfg.encoder_len, cfg.d_model)
         )
-        cache["cross"] = T.encode_cross_cache(cfg, params, enc, args.batch)
 
-    prefill = jax.jit(lambda p, t, c: T.decode_step(cfg, p, t, c))
-    decode = jax.jit(lambda p, t, c: T.decode_step(cfg, p, t, c))
+    res = generate(
+        cfg, params, prompts, max_new_tokens=args.tokens,
+        temperature=args.temperature, enc_embeds=enc,
+    )
 
-    t0 = time.time()
-    cache, logits = prefill(params, prompts, cache)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-
-    out = []
-    tok = jnp.argmax(logits, -1)[:, None]
-    t0 = time.time()
-    for i in range(args.tokens):
-        out.append(tok)
-        cache, logits = decode(params, tok, cache)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits / args.temperature)[:, None]
-        else:
-            tok = jnp.argmax(logits, -1)[:, None]
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    gen = np.asarray(jnp.concatenate(out, axis=1))
     print(f"arch={args.arch} batch={args.batch} "
           f"prompt={args.prompt_len} new_tokens={args.tokens}")
-    print(f"prefill: {t_prefill * 1e3:.1f} ms "
-          f"({args.batch * args.prompt_len / t_prefill:.0f} tok/s)")
-    print(f"decode : {t_decode * 1e3:.1f} ms "
-          f"({args.batch * args.tokens / t_decode:.0f} tok/s)")
+    print(f"prefill: {res.prefill_s * 1e3:.1f} ms "
+          f"({res.prefill_tok_s:.0f} tok/s)")
+    print(f"decode : {res.decode_s * 1e3:.1f} ms "
+          f"({res.decode_tok_s:.0f} tok/s)")
     for b in range(min(2, args.batch)):
-        print(f"  sample[{b}] generated ids: {gen[b][:12]} ...")
+        print(f"  sample[{b}] generated ids: {res.tokens[b][:12]} ...")
 
 
 if __name__ == "__main__":

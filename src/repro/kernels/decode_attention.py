@@ -1,0 +1,182 @@
+"""Pallas TPU paged-cache decode attention (single-query, block tables).
+
+Serving decodes one token per sequence per step against a PAGED KV cache:
+K/V live in a preallocated block pool ``(n_blocks, block_size, Hkv, D)``
+shared by every sequence, and each sequence owns an int32 block-table row
+naming which pool pages hold its history. The kernel is the cache-aware hot
+path: it gathers exactly the referenced pages — cost scales with the LIVE
+tokens, not the dense worst case (the same active-set argument as the
+paper's DSBA-s sparse relay).
+
+The gather is expressed in the grid spec, not in kernel-body DMAs: the
+block table and per-sequence lengths ride in scalar-prefetch position
+(``pltpu.PrefetchScalarGridSpec``), so the K/V BlockSpec index maps can
+read ``table[b, i]`` and point page ``i`` of sequence ``b`` straight at its
+pool page. Pallas then pipelines one (block_size, D) tile per grid step —
+unreferenced pool pages are never touched.
+
+Grid: ``(B, Hkv, n_pages)`` with the page axis innermost and sequential;
+an online-softmax carry (m / l / acc) persists in VMEM scratch across the
+page axis, exactly like the q-block carry in kernels/flash_attention.py.
+Pages past a sequence's length are skipped (``pl.when``); partial last
+pages are masked by position, never read out of bounds. Empty slots
+(length 0 — the scheduler's padding lanes) produce an all-zero output row
+via the ``max(l, eps)`` guard.
+
+GQA is free here: one program instance handles a kv head's whole query
+group, so the (group, block_size) score tile never replicates K/V.
+
+Validated against kernels/ref.py ``decode_attention_ref`` in interpret
+mode; dispatch and tolerance policy live in kernels/ops.py
+(``ModelConfig.decode_kernel`` routes the serving path through it).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref, *,
+    block_size: int, n_pages: int, window: int | None,
+    softcap: float | None, scale: float,
+):
+    """One (sequence, kv-head, page) program instance.
+
+    table_ref/len_ref: scalar-prefetch refs (full (B, n_pages) / (B,));
+    q_ref: (1, group, D) — this kv head's query group;
+    k_ref/v_ref: (1, block_size, 1, D) — the pool page the index map
+    gathered through the block table; o_ref: (1, group, D);
+    acc/m/l: VMEM online-softmax carry persisting across the page axis.
+    """
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # pages at or past the sequence length hold no valid tokens: skip the
+    # matmul entirely (the index map already pointed them at page 0).
+    @pl.when(i * block_size < length)
+    def _update():
+        q = q_ref[0].astype(jnp.float32) * scale  # (group, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_size, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (group, block_size)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = i * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_size), 1
+        )
+        mask = pos < length
+        if window is not None:
+            # the single query sits at position length - 1
+            mask &= pos >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (group, 1)
+        m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_cur
+
+    @pl.when(i == n_pages - 1)
+    def _finalize():
+        l_safe = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+def _pad_last(x: jax.Array, to: int) -> jax.Array:
+    pad = (-x.shape[-1]) % to
+    if not pad:
+        return x
+    return jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+
+
+def decode_attention(
+    q: jax.Array,  # (B, Hq, D) — one query token per sequence
+    k_pool: jax.Array,  # (n_blocks, block_size, Hkv, D) shared page pool
+    v_pool: jax.Array,
+    table: jax.Array,  # (B, n_pages) int32 — pool page ids per sequence
+    lengths: jax.Array,  # (B,) int32 — valid tokens incl. the current one
+    *,
+    window: int | None = None,
+    softcap: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged single-query attention launch -> (B, Hq, D) in q.dtype.
+
+    ``lengths[b]`` counts the tokens already written to sequence b's pages
+    (including the token being decoded, at position ``lengths[b] - 1``);
+    page ``i`` covers positions ``[i * block_size, (i+1) * block_size)``.
+    Unused table entries may point anywhere in range (the scheduler points
+    them at the reserved null page 0) — they are masked, never read beyond
+    a DMA the carry ignores. D is zero-padded to the 128 lane width; padded
+    columns contribute nothing and are sliced off.
+    """
+    B, Hq, D = q.shape
+    n_blocks, block_size, Hkv, _ = k_pool.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    n_pages = table.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    qp = _pad_last(q, 128)
+    kp = _pad_last(k_pool, 128)
+    vp = _pad_last(v_pool, 128)
+    Dp = qp.shape[-1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, group, Dp), lambda b, h, i, t, le: (b, h, 0)),
+            pl.BlockSpec(
+                (1, block_size, 1, Dp),
+                lambda b, h, i, t, le: (t[b, i], 0, h, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_size, 1, Dp),
+                lambda b, h, i, t, le: (t[b, i], 0, h, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, group, Dp), lambda b, h, i, t, le: (b, h, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((group, Dp), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _decode_kernel, block_size=block_size, n_pages=n_pages,
+        window=window, softcap=softcap, scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Dp), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), lengths.astype(jnp.int32), qp, kp, vp)
+    return out[..., :D]

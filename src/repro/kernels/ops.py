@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import decode_attention as DA
 from repro.kernels import flash_attention as FA
 from repro.kernels import ref as R
 from repro.kernels import ssd_scan as SSD
@@ -337,6 +338,25 @@ register_kernel(KernelSpec(
 ))
 
 
+def _decode_attn_pallas(q, k_pool, v_pool, table, lengths, *, window=None,
+                        softcap=None, interpret=False):
+    """Registry adapter: the paged single-query decode-attention launch
+    (block-table gather in the scalar-prefetch index maps)."""
+    return DA.decode_attention(
+        q, k_pool, v_pool, table, lengths,
+        window=window, softcap=softcap, interpret=interpret,
+    )
+
+
+register_kernel(KernelSpec(
+    name="decode_attention",
+    pallas=_decode_attn_pallas,
+    ref=R.decode_attention_ref,
+    # decode is inference-only: no grad surface is declared
+    tol={"float32": _F32_TOL, "bfloat16": _BF16_TOL},
+))
+
+
 def _ssd_pallas(xdt, cum, Bc, Cc, *, head_block=None, interpret=False):
     """Registry adapter: the ssd_chunk custom_vjp wrapper (within-chunk
     forward kernel + chunked backward kernel over the saved residuals).
@@ -427,6 +447,17 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
     the oracle under 'off'/CPU-'auto')."""
     return dispatch("flash_attention", q, k, v, causal=causal, window=window,
                     softcap=softcap, use_pallas=use_pallas)
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "use_pallas"))
+def decode_attention(q, k_pool, v_pool, table, lengths, *, window=None,
+                     softcap=None, use_pallas: str = "auto"):
+    """Registry-dispatched paged single-query decode attention (the serving
+    hot path; ModelConfig.decode_kernel picks the mode)."""
+    return dispatch(
+        "decode_attention", q, k_pool, v_pool, table, lengths,
+        window=window, softcap=softcap, use_pallas=use_pallas,
+    )
 
 
 @partial(jax.jit, static_argnames=("use_pallas",))

@@ -64,6 +64,43 @@ def attention_ref(
     return o.reshape(B, Hq, S, D).astype(q.dtype)
 
 
+def decode_attention_ref(
+    q: jax.Array,  # (B, Hq, D) — one query token per sequence
+    k_pool: jax.Array,  # (n_blocks, block_size, Hkv, D)
+    v_pool: jax.Array,
+    table: jax.Array,  # (B, n_pages) int32
+    lengths: jax.Array,  # (B,) int32 — valid tokens incl. the current one
+    *,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    """Paged single-query attention oracle: jnp gather through the block
+    table, then masked GQA softmax-attention over the flattened pages.
+    Rows with ``lengths == 0`` (scheduler padding lanes) return zeros, to
+    match the kernel's ``max(l, eps)`` guard."""
+    B, Hq, D = q.shape
+    block_size, Hkv = k_pool.shape[1], k_pool.shape[2]
+    g = Hq // Hkv
+    L = table.shape[1] * block_size
+    k = k_pool[table].reshape(B, L, Hkv, D).astype(jnp.float32)
+    v = v_pool[table].reshape(B, L, Hkv, D).astype(jnp.float32)
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32) / math.sqrt(D)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(L)
+    mask = pos[None, :] < lengths[:, None]  # (B, L)
+    if window is not None:
+        # the single query sits at position lengths - 1
+        mask &= pos[None, :] >= lengths[:, None] - window
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows would softmax to uniform; zero them instead
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v)
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
 def ssd_chunk_ref(xdt, cum, Bc, Cc):
     """Within-chunk SSD: (y_intra, chunk states). Shapes as ssd_chunk_fwd."""
     decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,nh)

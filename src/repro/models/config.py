@@ -18,9 +18,20 @@ unified vocab (chameleon).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any
 
 import jax.numpy as jnp
+
+
+def _kernel_default() -> str:
+    """Default use_pallas mode for the kernel-routing knobs.
+
+    'auto' (Pallas on TPU, jnp oracle on CPU) unless the REPRO_KERNEL_MODE
+    env var overrides it — the escape hatch back to 'jnp' (the inline
+    einsum paths) or to a forced mode, without touching configs.
+    """
+    return os.environ.get("REPRO_KERNEL_MODE", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,18 +97,26 @@ class ModelConfig:
     blockwise_attention: bool = False  # online-softmax, no S x S buffer
     attention_block_k: int = 1024
     # route full-sequence self-attention through the kernels/ops.py backend
-    # registry: 'jnp' = the sharded einsum path below (default), otherwise a
-    # use_pallas mode ('auto'|'on'|'interpret'|'off') handed to
+    # registry: 'jnp' = the sharded einsum path in models/layers.py,
+    # otherwise a use_pallas mode ('auto'|'on'|'interpret'|'off') handed to
     # ops.flash_attention (custom_vjp Pallas kernel on TPU, jnp oracle on
-    # CPU under 'auto'). Decode/cross/traced-window paths stay on 'jnp'.
-    # The kernel is a custom_vjp, so training gradients route through the
-    # blocked Pallas backward under the same mode.
-    attention_kernel: str = "jnp"
+    # CPU under 'auto' — the default; REPRO_KERNEL_MODE env var overrides).
+    # Decode/cross paths stay on 'jnp'. The kernel is a custom_vjp, so
+    # training gradients route through the blocked Pallas backward under
+    # the same mode.
+    attention_kernel: str = dataclasses.field(default_factory=_kernel_default)
     # route the SSD within-chunk compute (train/prefill) through the
     # registry's ssd_chunk custom_vjp kernel: 'jnp' = the inline einsum
-    # path in models/ssm.py (default), otherwise a use_pallas mode. The
-    # O(1) recurrent decode step stays on 'jnp' (no chunk structure).
-    ssm_kernel: str = "jnp"
+    # path in models/ssm.py, otherwise a use_pallas mode (default 'auto';
+    # REPRO_KERNEL_MODE overrides). The O(1) recurrent decode step stays
+    # on 'jnp' (no chunk structure).
+    ssm_kernel: str = dataclasses.field(default_factory=_kernel_default)
+    # route paged-cache serving decode (src/repro/serve/) through the
+    # registry's decode_attention kernel: a use_pallas mode (default
+    # 'auto'; REPRO_KERNEL_MODE overrides). 'jnp' degrades to 'off' (the
+    # jnp-gather oracle) — unlike train/prefill there is no separate
+    # inline path, the oracle IS the reference implementation.
+    decode_kernel: str = dataclasses.field(default_factory=_kernel_default)
     # shard attention compute by Q heads (n_heads) instead of KV heads:
     # GQA models with kv_heads < mesh 'model' size otherwise replicate the
     # whole attention computation across the model axis. Expands K/V per

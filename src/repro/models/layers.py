@@ -152,21 +152,18 @@ def attention_defs(cfg: ModelConfig, cross: bool = False) -> dict:
     return defs
 
 
-def _attn_scores_mask(q_pos, k_pos, window, causal, traced_window=None):
+def _attn_scores_mask(q_pos, k_pos, window, causal):
     """(S_q, S_k) boolean mask: True = attend.
 
-    traced_window: optional TRACED int scalar (scanned per-layer schedule);
-    negative means global attention. `window` is the static equivalent.
+    `window` is always STATIC (None or a python int): gemma2-style
+    local/global alternation is expressed by the pair scan in
+    models/transformer.py, not by threading a traced per-layer scalar.
     """
     m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
     if causal:
         m &= q_pos[:, None] >= k_pos[None, :]
     if window is not None:
         m &= q_pos[:, None] - k_pos[None, :] < window
-    if traced_window is not None:
-        m &= (traced_window < 0) | (
-            q_pos[:, None] - k_pos[None, :] < traced_window
-        )
     return m
 
 
@@ -182,7 +179,6 @@ def multi_head_attention(
     window: int | None = None,
     use_rope: bool = True,
     cache: dict | None = None,  # {'k','v': (B, L, KV, Dh), 'pos': ()} decode
-    _traced_window: jax.Array | None = None,  # per-layer scanned schedule
 ) -> tuple[jax.Array, dict | None]:
     dt = cfg.compute_dtype
     B, S, _ = x.shape
@@ -220,7 +216,7 @@ def multi_head_attention(
 
     use_kernel = (
         cfg.attention_kernel != "jnp" and cache is None and kv_x is None
-        and _traced_window is None and not cfg.blockwise_attention
+        and not cfg.blockwise_attention
     )
     if not use_kernel:
         # GQA grouping
@@ -265,7 +261,7 @@ def multi_head_attention(
         out = _blockwise_attention(
             qg * scale, k, v, q_pos_row, k_pos_row,
             causal=causal and kv_x is None, window=window,
-            softcap_v=cfg.attn_softcap, traced_window=_traced_window,
+            softcap_v=cfg.attn_softcap,
             block_k=cfg.attention_block_k,
             valid_len=(cache["pos"] + S)
             if (cache is not None and kv_x is None) else None,
@@ -277,7 +273,6 @@ def multi_head_attention(
         scores = softcap(scores.astype(jnp.float32), cfg.attn_softcap)
         mask = _attn_scores_mask(
             q_pos_row, k_pos_row, window, causal and kv_x is None,
-            _traced_window,
         )
         if cache is not None and kv_x is None:
             # only cache slots already written are valid
@@ -290,6 +285,64 @@ def multi_head_attention(
         out = out.reshape(B, q.shape[1], cfg.n_heads, cfg.head_dim)
     y = jnp.einsum("bshq,hqd->bsd", out, p["wo"].astype(dt))
     return shard_act(y, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged attention (serving decode against a shared KV block pool)
+# ---------------------------------------------------------------------------
+
+def paged_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # (B, 1, d) — one new token per sequence slot
+    positions: jax.Array,  # (B, 1) — rope position of the new token
+    pool_k: jax.Array,  # (n_blocks, block_size, KV, Dh) shared page pool
+    pool_v: jax.Array,
+    table: jax.Array,  # (B, n_pages) int32 — pool page ids per slot
+    lengths: jax.Array,  # (B,) int32 — tokens already cached per slot
+    *,
+    window: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token self-attention against a paged KV pool (serving decode).
+
+    The new token's K/V are written in place at page ``table[b, len//bs]``
+    offset ``len % bs``, then attention runs over ``lengths + 1`` tokens
+    through the registry's decode_attention kernel
+    (``cfg.decode_kernel`` picks the backend; 'jnp' degrades to the
+    jnp-gather oracle). Inactive slots (length 0, all-null table rows)
+    write to the reserved null page and read back zeros — padding lanes
+    cost one masked page, not a recompile.
+
+    Returns (y (B, 1, d), new_pool_k, new_pool_v).
+    """
+    from repro.kernels import ops as KO
+
+    dt = cfg.compute_dtype
+    B = x.shape[0]
+    xc = x.astype(dt)
+    q = jnp.einsum("bsd,dhq->bshq", xc, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhq->bshq", xc, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhq->bshq", xc, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    block_size = pool_k.shape[1]
+    page = table[jnp.arange(B), lengths // block_size]  # (B,)
+    off = lengths % block_size
+    pool_k = pool_k.at[page, off].set(k[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[page, off].set(v[:, 0].astype(pool_v.dtype))
+
+    mode = "off" if cfg.decode_kernel == "jnp" else cfg.decode_kernel
+    o = KO.decode_attention(
+        q[:, 0], pool_k, pool_v, table, lengths + 1,
+        window=window, softcap=cfg.attn_softcap, use_pallas=mode,
+    )  # (B, Hq, Dh)
+    y = jnp.einsum("bhq,hqd->bd", o.astype(dt), p["wo"].astype(dt))
+    return y[:, None], pool_k, pool_v
 
 
 # ---------------------------------------------------------------------------
@@ -310,7 +363,6 @@ def _blockwise_attention(
     causal: bool,
     window: int | None,
     softcap_v: float | None,
-    traced_window: jax.Array | None,
     block_k: int,
     valid_len: jax.Array | None = None,  # decode: cache fill level
 ) -> jax.Array:
@@ -340,10 +392,6 @@ def _blockwise_attention(
             mask &= q_pos[:, None] >= p_t[None, :]
         if window is not None:
             mask &= q_pos[:, None] - p_t[None, :] < window
-        if traced_window is not None:
-            mask &= (traced_window < 0) | (
-                q_pos[:, None] - p_t[None, :] < traced_window
-            )
         mask &= (p_t >= 0)[None, :]
         if valid_len is not None:
             mask &= (p_t < valid_len)[None, :]

@@ -181,6 +181,7 @@ def ssm_block(
     x: jax.Array,  # (B, S, d_model)
     *,
     cache: dict | None = None,  # decode: {'state': (B,nh,ds,hd), 'conv': (B,W-1,C)}
+    valid_len: jax.Array | None = None,  # (B,) prefill: true prompt lengths
 ) -> tuple[jax.Array, dict | None]:
     dt_c = cfg.compute_dtype
     B, S, _ = x.shape
@@ -207,7 +208,15 @@ def ssm_block(
         # prepend the conv history window (works for prefill S>1 and decode S=1)
         conv_full = jnp.concatenate([cache["conv"], conv_in], axis=1)
         conv_out = _depthwise_conv_valid(conv_full, conv_w)  # (B, S, C)
-        new_conv = conv_full[:, -(W - 1):]
+        if valid_len is None:
+            new_conv = conv_full[:, -(W - 1):]
+        else:
+            # right-padded prefill: the history window must end at each
+            # row's LAST VALID token (token t sits at conv_full row
+            # W-1+t, so the window is rows [valid_len, valid_len+W-1))
+            new_conv = jax.vmap(
+                lambda cb, s: jax.lax.dynamic_slice_in_dim(cb, s, W - 1, 0)
+            )(conv_full, valid_len.astype(jnp.int32))
 
     xi, Bc, Cc = (
         conv_out[..., :din],
@@ -218,6 +227,13 @@ def ssm_block(
     dt = jax.nn.softplus(
         dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
     )
+    if valid_len is not None and cache is not None and S > 1:
+        # pad tokens become exact identity updates: dt = 0 gives decay
+        # exp(0) = 1 and contribution 0 (the same trick _ssd_chunked uses
+        # for its internal chunk padding), so the prefill state equals
+        # processing exactly valid_len tokens
+        keep = jnp.arange(S)[None, :] < valid_len[:, None]  # (B, S)
+        dt = jnp.where(keep[..., None], dt, 0.0)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (nh,) negative
     a_log = dt * A[None, None, :]
 

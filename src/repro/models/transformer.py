@@ -4,8 +4,10 @@ Families:
   dense / moe / ssm : homogeneous stacks -> jax.lax.scan over stacked layer
                       params (compile-time O(1) in depth; required for the
                       126-layer / 1T-param dry-runs). gemma2's alternating
-                      local/global attention is handled by a per-layer window
-                      array threaded through the scan.
+                      local/global attention scans over layer PAIRS — the
+                      stacked params reshape (n, ...) -> (n//2, 2, ...) and
+                      the body applies a local then a global block, so both
+                      window sizes are STATIC and kernel-eligible.
   hybrid (zamba2)   : python-unrolled Mamba2 stack with a SHARED attention
                       block (one set of weights, applied every
                       cfg.hybrid_period layers).
@@ -16,8 +18,16 @@ Public API:
   model_defs(cfg)                      -> ParamDef tree
   forward(cfg, params, batch)          -> logits            (train / scoring)
   cache_defs(cfg, batch, max_len)      -> decode-cache ShapeDtypeStructs
-  prefill(cfg, params, batch, cache)   -> (cache, last_logits)
+  prefill(cfg, params, tok, cache)     -> (cache, logits at valid_len - 1)
   decode_step(cfg, params, tok, cache) -> (cache, logits)
+
+Serving API (the paged-pool twin, driven by src/repro/serve/):
+  paged_cache_defs(cfg, max_batch, n_blocks, block_size, n_pages)
+  decode_step_paged(cfg, params, tok, pools, table, lengths)
+                                       -> (pools, logits)
+K/V lives in a shared page pool with per-slot block tables instead of one
+contiguous (B, max_len) buffer; attention gathers through the table via
+the registry's decode_attention kernel (cfg.decode_kernel).
 
 Kernel routing: `cfg.attention_kernel` / `cfg.ssm_kernel` swap the full-seq
 attention and SSD within-chunk compute for the kernels/ops.py registry's
@@ -123,18 +133,19 @@ def _remat(cfg: ModelConfig, fn):
     return jax.checkpoint(fn)
 
 
-def _window_schedule(cfg: ModelConfig) -> jnp.ndarray | None:
-    """Per-layer sliding window for the scan, or None when uniform.
+def _layer_windows(cfg: ModelConfig) -> tuple[int | None, ...]:
+    """STATIC per-scan-step window schedule.
 
-    gemma2-style alternation (odd layers global, -1) needs a traced
-    per-layer scalar threaded through the scan; every other schedule is
-    uniform and stays STATIC (None here; _scan_stack then applies
-    cfg.sliding_window at trace time)."""
+    Uniform schedules scan one layer per step with cfg.sliding_window.
+    gemma2-style alternation (cfg.local_global) scans layer PAIRS: each
+    step applies a local (sliding_window) then a global (None) block, so
+    both windows fold at trace time — no traced per-layer scalar, and the
+    kernel routing (flash for train/prefill, decode_attention for serving)
+    stays eligible."""
     if cfg.local_global and cfg.sliding_window:
-        w = [cfg.sliding_window if i % 2 == 0 else -1
-             for i in range(cfg.n_layers)]
-        return jnp.asarray(w, jnp.int32)
-    return None
+        assert cfg.n_layers % 2 == 0, "local_global needs an even stack"
+        return (cfg.sliding_window, None)
+    return (cfg.sliding_window,)
 
 
 def _embed(cfg: ModelConfig, params, tokens=None, inputs_embeds=None):
@@ -159,14 +170,12 @@ def _unembed(cfg: ModelConfig, params, x):
 # ---------------------------------------------------------------------------
 
 def _dense_block(cfg: ModelConfig, p, x, positions, window, cache):
-    # `window` is either static (None / python int — uniform schedules, so
-    # the mask folds at trace time and kernel routing stays eligible) or a
-    # traced per-layer scalar from the scanned gemma2-style schedule.
-    static = window is None or isinstance(window, int)
+    # `window` is always STATIC (None / python int): the mask folds at
+    # trace time and kernel routing stays eligible. gemma2's alternation
+    # is expressed by the pair scan in _scan_stack, never a traced scalar.
     h, new_cache = L.multi_head_attention(
         cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
-        causal=True, window=window if static else None, cache=cache,
-        _traced_window=None if static else window,
+        causal=True, window=window, cache=cache,
     )
     x = x + h
     inner = L.rms_norm(x, p["ln2"], cfg.norm_eps)
@@ -177,58 +186,79 @@ def _dense_block(cfg: ModelConfig, p, x, positions, window, cache):
     return x, new_cache
 
 
-def _ssm_layer(cfg: ModelConfig, p, x, cache):
+def _ssm_layer(cfg: ModelConfig, p, x, cache, valid_len=None):
     h, new_cache = S.ssm_block(
-        cfg, p["ssm"], L.rms_norm(x, p["ln"], cfg.norm_eps), cache=cache
+        cfg, p["ssm"], L.rms_norm(x, p["ln"], cfg.norm_eps), cache=cache,
+        valid_len=valid_len,
     )
     return x + h, new_cache
 
 
-def _scan_stack(cfg, blocks, x, positions, windows, caches):
-    """Scan over stacked layer params (+ per-layer window + optional cache).
+def _substack(t, m: int):
+    """Reshape a stacked leaf (n, ...) -> (n/m, m, ...) for the pair scan."""
+    return t.reshape(t.shape[0] // m, m, *t.shape[1:])
 
-    windows=None means a uniform schedule: every layer gets the STATIC
-    cfg.sliding_window instead of threading a traced per-layer scalar
-    through the scan (mask folds at trace time; kernel routing eligible).
-    caches['pos'] is a scalar shared by all layers, so it rides in the
-    closure; only the stacked k/v tensors are scanned.
+
+def _unsubstack(t, m: int):
+    """Inverse of _substack on a scan output: (n/m, m, ...) -> (n, ...)."""
+    return t.reshape(t.shape[0] * m, *t.shape[2:])
+
+
+def _scan_stack(cfg, blocks, x, positions, caches):
+    """Scan over stacked layer params (+ optional cache).
+
+    Uniform schedules scan one layer per step (STATIC cfg.sliding_window:
+    the mask folds at trace time; kernel routing eligible). gemma2-style
+    local/global alternation scans layer PAIRS instead — stacked leaves
+    reshape (n, ...) -> (n//2, 2, ...) and the body applies the local then
+    the global block, so both windows are static too (the carried-over
+    traced-window thread is gone). caches['pos'] is a scalar shared by all
+    layers, so it rides in the closure; only stacked k/v tensors scan.
     """
     has_cache = caches is not None
     pos = caches["pos"] if has_cache else None
-    uniform = windows is None
+    windows = _layer_windows(cfg)
+    m = len(windows)
+    blocks = jax.tree_util.tree_map(lambda t: _substack(t, m), blocks)
 
     def body(carry, xs):
         x = carry
         if has_cache:
-            (p, k, v) = xs if uniform else (xs[0], xs[2], xs[3])
-            w = cfg.sliding_window if uniform else xs[1]
-            x, new_c = _dense_block(
-                cfg, p, x, positions, w, {"k": k, "v": v, "pos": pos}
-            )
-            return x, (new_c["k"], new_c["v"])
-        p = xs[0]
-        w = cfg.sliding_window if uniform else xs[1]
-        x, _ = _dense_block(cfg, p, x, positions, w, None)
+            p, k, v = xs
+            nk, nv = [], []
+            for j, w in enumerate(windows):
+                pj = jax.tree_util.tree_map(lambda a: a[j], p)
+                x, c = _dense_block(
+                    cfg, pj, x, positions, w,
+                    {"k": k[j], "v": v[j], "pos": pos},
+                )
+                nk.append(c["k"])
+                nv.append(c["v"])
+            return x, (jnp.stack(nk), jnp.stack(nv))
+        (p,) = xs
+        for j, w in enumerate(windows):
+            pj = jax.tree_util.tree_map(lambda a: a[j], p)
+            x, _ = _dense_block(cfg, pj, x, positions, w, None)
         return x, None
 
     body = _remat(cfg, body)
     if has_cache:
-        xs = ((blocks, caches["k"], caches["v"]) if uniform
-              else (blocks, windows, caches["k"], caches["v"]))
+        xs = (blocks, _substack(caches["k"], m), _substack(caches["v"], m))
         x, (nk, nv) = jax.lax.scan(body, x, xs)
-        return x, {"k": nk, "v": nv, "pos": pos + positions.shape[1]}
-    x, _ = jax.lax.scan(body, x, (blocks,) if uniform else (blocks, windows))
+        return x, {"k": _unsubstack(nk, m), "v": _unsubstack(nv, m),
+                   "pos": pos + positions.shape[1]}
+    x, _ = jax.lax.scan(body, x, (blocks,))
     return x, None
 
 
-def _scan_ssm_stack(cfg, blocks, x, caches):
+def _scan_ssm_stack(cfg, blocks, x, caches, valid_len=None):
     has_cache = caches is not None
 
     def body(carry, xs):
         x = carry
         if has_cache:
             p, c = xs
-            x, new_c = _ssm_layer(cfg, p, x, c)
+            x, new_c = _ssm_layer(cfg, p, x, c, valid_len)
             return x, new_c
         (p,) = xs
         x, _ = _ssm_layer(cfg, p, x, None)
@@ -261,8 +291,7 @@ def forward(
     positions = jnp.broadcast_to(jnp.arange(Seq)[None], (B, Seq))
 
     if cfg.family in ("dense", "moe"):
-        windows = _window_schedule(cfg)
-        x, _ = _scan_stack(cfg, params["blocks"], x, positions, windows, None)
+        x, _ = _scan_stack(cfg, params["blocks"], x, positions, None)
     elif cfg.family == "ssm":
         x, _ = _scan_ssm_stack(cfg, params["blocks"], x, None)
     elif cfg.family == "hybrid":
@@ -272,12 +301,14 @@ def forward(
     return _unembed(cfg, params, x)
 
 
-def _hybrid_forward(cfg, params, x, positions, caches):
+def _hybrid_forward(cfg, params, x, positions, caches, valid_len=None):
     """zamba2: mamba stack with the shared attention block interleaved."""
     blocks = params["blocks"]
     new_ssm_caches, new_attn_caches = [], []
     ai = 0
-    block_fn = _remat(cfg, lambda p, x, c: _ssm_layer(cfg, p, x, c))
+    block_fn = _remat(
+        cfg, lambda p, x, c: _ssm_layer(cfg, p, x, c, valid_len)
+    )
     for i in range(cfg.n_layers):
         p_i = jax.tree_util.tree_map(lambda a: a[i], blocks)
         c_i = None if caches is None else jax.tree_util.tree_map(
@@ -451,6 +482,30 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     )
 
 
+def _stack_apply(cfg, params, tokens, cache, enc_embeds, valid_len):
+    """Shared decode/prefill body -> (new_cache, x (B, S, d))."""
+    if cfg.family == "encdec":
+        return _decode_encdec(cfg, params, tokens, cache, enc_embeds)
+    B, Sq = tokens.shape
+    x = _embed(cfg, params, tokens)
+    pos0 = _cache_pos(cfg, cache)
+    positions = pos0 + jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+
+    if cfg.family in ("dense", "moe"):
+        x, new_cache = _scan_stack(cfg, params["blocks"], x, positions, cache)
+    elif cfg.family == "ssm":
+        x, new_cache = _scan_ssm_stack(
+            cfg, params["blocks"], x, cache, valid_len
+        )
+    elif cfg.family == "hybrid":
+        x, new_cache = _hybrid_forward(
+            cfg, params, x, positions, caches=cache, valid_len=valid_len
+        )
+    else:
+        raise ValueError(cfg.family)
+    return new_cache, x
+
+
 def decode_step(
     cfg: ModelConfig,
     params: dict,
@@ -461,26 +516,41 @@ def decode_step(
 ) -> tuple[dict, jax.Array]:
     """Process tokens at positions cache['pos']..+S, return updated cache +
     logits for the last position."""
-    if cfg.family == "encdec":
-        return _decode_encdec(cfg, params, tokens, cache, enc_embeds)
-
-    B, Sq = tokens.shape
-    x = _embed(cfg, params, tokens)
-    pos0 = _cache_pos(cfg, cache)
-    positions = pos0 + jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
-
-    if cfg.family in ("dense", "moe"):
-        windows = _window_schedule(cfg)
-        x, new_cache = _scan_stack(
-            cfg, params["blocks"], x, positions, windows, cache
-        )
-    elif cfg.family == "ssm":
-        x, new_cache = _scan_ssm_stack(cfg, params["blocks"], x, cache)
-    elif cfg.family == "hybrid":
-        x, new_cache = _hybrid_forward(cfg, params, x, positions, caches=cache)
-    else:
-        raise ValueError(cfg.family)
+    new_cache, x = _stack_apply(cfg, params, tokens, cache, enc_embeds, None)
     logits = _unembed(cfg, params, x[:, -1:])
+    return new_cache, logits[:, 0]
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # (B, S) — prompts, right-padded to a fixed S
+    cache: dict,
+    *,
+    enc_embeds: jax.Array | None = None,
+    valid_len: jax.Array | None = None,  # (B,) true prompt lengths
+) -> tuple[dict, jax.Array]:
+    """Run the (padded) prompt through the stack once at a FIXED compiled
+    shape, returning (cache, logits at each row's last valid position).
+
+    valid_len=None means every row uses the full S (same as decode_step).
+    With valid_len, rows are right-padded: attention is causal so pad
+    positions never influence valid ones, and the SSM recurrence treats
+    pad tokens as exact identity updates (dt forced to 0, conv history
+    sliced at valid_len) — the state after prefill equals processing
+    exactly valid_len tokens. Attention K/V *at pad positions* hold
+    garbage; the serving layer only copies the valid blocks into the pool,
+    and the contiguous cache's 'pos' advances by the PADDED S.
+    """
+    new_cache, x = _stack_apply(
+        cfg, params, tokens, cache, enc_embeds, valid_len
+    )
+    if valid_len is None:
+        xl = x[:, -1:]
+    else:
+        idx = jnp.maximum(valid_len.astype(jnp.int32) - 1, 0)
+        xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    logits = _unembed(cfg, params, xl)
     return new_cache, logits[:, 0]
 
 
@@ -531,8 +601,207 @@ def _decode_encdec(cfg, params, tokens, cache, enc_embeds):
         "self": {"k": nk, "v": nv, "pos": pos0 + Sq},
         "cross": cache["cross"],
     }
+    return new_cache, x
+
+
+# ---------------------------------------------------------------------------
+# paged decode: shared KV page pool + per-slot block tables (serving)
+# ---------------------------------------------------------------------------
+
+def paged_cache_defs(
+    cfg: ModelConfig, max_batch: int, n_blocks: int, block_size: int,
+    n_pages: int,
+) -> dict:
+    """ShapeDtypeStruct tree for the serving pool state.
+
+    Attention K/V live in a SHARED page pool (n_layers, n_blocks,
+    block_size, KV, Dh) — slots reference pages through the scheduler's
+    (max_batch, n_pages) block table, so device memory scales with live
+    tokens, not max_batch * max_len. SSM states, conv histories, and
+    whisper cross K/V are per-slot fixed-size (their size is
+    length-independent), indexed by slot id — the adapter that lets every
+    family sit behind the same CachePool interface.
+    """
+    del n_pages  # table shape is scheduler state, not pool state
+    kv = lambda n: {
+        "k": jax.ShapeDtypeStruct(
+            (n, n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim),
+            cfg.compute_dtype,
+        ),
+        "v": jax.ShapeDtypeStruct(
+            (n, n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim),
+            cfg.compute_dtype,
+        ),
+    }
+    if cfg.family in ("dense", "moe"):
+        return kv(cfg.n_layers)
+    if cfg.family == "ssm":
+        one = S.ssm_cache_defs(cfg, max_batch)
+        return {
+            k: jax.ShapeDtypeStruct((cfg.n_layers, *v.shape), v.dtype)
+            for k, v in one.items()
+        }
+    if cfg.family == "hybrid":
+        one = S.ssm_cache_defs(cfg, max_batch)
+        return {
+            "ssm": {
+                k: jax.ShapeDtypeStruct((cfg.n_layers, *v.shape), v.dtype)
+                for k, v in one.items()
+            },
+            "attn": kv(cfg.n_layers // cfg.hybrid_period),
+        }
+    if cfg.family == "encdec":
+        cross = lambda: jax.ShapeDtypeStruct(
+            (cfg.n_layers, max_batch, cfg.encoder_len, cfg.n_kv_heads,
+             cfg.head_dim), cfg.compute_dtype,
+        )
+        return {"self": kv(cfg.n_layers),
+                "cross": {"k": cross(), "v": cross()}}
+    raise ValueError(cfg.family)
+
+
+def _paged_block(cfg, p, x, positions, window, pk, pv, table, lengths):
+    h, pk, pv = L.paged_attention(
+        cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+        pk, pv, table, lengths, window=window,
+    )
+    x = x + h
+    inner = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + L.moe(cfg, p["moe"], inner)
+    else:
+        x = x + L.mlp(cfg, p["mlp"], inner)
+    return x, pk, pv
+
+
+def _paged_scan_stack(cfg, blocks, x, positions, pools, table, lengths):
+    """The paged twin of _scan_stack: k/v pool pages scanned per layer,
+    table/lengths shared across layers in the closure. Same pair-scan
+    treatment of gemma2's local/global alternation (static windows)."""
+    windows = _layer_windows(cfg)
+    m = len(windows)
+    blocks = jax.tree_util.tree_map(lambda t: _substack(t, m), blocks)
+
+    def body(carry, xs):
+        x = carry
+        p, k, v = xs
+        nk, nv = [], []
+        for j, w in enumerate(windows):
+            pj = jax.tree_util.tree_map(lambda a: a[j], p)
+            x, k1, v1 = _paged_block(
+                cfg, pj, x, positions, w, k[j], v[j], table, lengths
+            )
+            nk.append(k1)
+            nv.append(v1)
+        return x, (jnp.stack(nk), jnp.stack(nv))
+
+    xs = (blocks, _substack(pools["k"], m), _substack(pools["v"], m))
+    x, (nk, nv) = jax.lax.scan(body, x, xs)
+    return x, {"k": _unsubstack(nk, m), "v": _unsubstack(nv, m)}
+
+
+def _paged_hybrid(cfg, params, x, positions, pools, table, lengths):
+    blocks = params["blocks"]
+    new_ssm, new_k, new_v = [], [], []
+    ai = 0
+    pk, pv = pools["attn"]["k"], pools["attn"]["v"]
+    for i in range(cfg.n_layers):
+        p_i = jax.tree_util.tree_map(lambda a: a[i], blocks)
+        c_i = jax.tree_util.tree_map(lambda a: a[i], pools["ssm"])
+        x, nc = _ssm_layer(cfg, p_i, x, c_i)
+        new_ssm.append(nc)
+        if (i + 1) % cfg.hybrid_period == 0:
+            x, k1, v1 = _paged_block(
+                cfg, params["shared_attn"], x, positions, None,
+                pk[ai], pv[ai], table, lengths,
+            )
+            new_k.append(k1)
+            new_v.append(v1)
+            ai += 1
+    stack = lambda xs: jax.tree_util.tree_map(lambda *a: jnp.stack(a), *xs)
+    return x, {
+        "ssm": stack(new_ssm),
+        "attn": {"k": jnp.stack(new_k), "v": jnp.stack(new_v)},
+    }
+
+
+def _paged_encdec(cfg, params, x, positions, pools, table, lengths):
+    B = x.shape[0]
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(cfg.encoder_len)[None], (B, cfg.encoder_len)
+    )
+
+    def body(carry, xs):
+        x = carry
+        p, pk, pv, xk, xv = xs
+        h, pk, pv = L.paged_attention(
+            cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+            pk, pv, table, lengths, window=None,
+        )
+        x = x + h
+        # cross K/V are per-slot contiguous (encoder length is fixed and
+        # fully live — paging buys nothing); reuse the cached-K/V MHA path
+        h, _ = L.multi_head_attention(
+            cfg, p["xattn"], L.rms_norm(x, p["ln_x"], cfg.norm_eps),
+            positions,
+            kv_x=jnp.zeros((B, 1, cfg.d_model), x.dtype),  # unused; cached
+            kv_positions=enc_pos, causal=False, use_rope=False,
+            cache={"k": xk, "v": xv, "pos": jnp.int32(0)},
+        )
+        x = x + h
+        x = x + L.mlp(cfg, p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, (pk, pv)
+
+    xs = (
+        params["decoder"],
+        pools["self"]["k"], pools["self"]["v"],
+        pools["cross"]["k"], pools["cross"]["v"],
+    )
+    x, (nk, nv) = jax.lax.scan(body, x, xs)
+    return x, {"self": {"k": nk, "v": nv}, "cross": pools["cross"]}
+
+
+def decode_step_paged(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # (B, 1) — one new token per scheduler slot
+    pools: dict,  # paged_cache_defs-shaped pool state
+    table: jax.Array,  # (B, n_pages) int32 — pool page ids per slot
+    lengths: jax.Array,  # (B,) int32 — tokens already cached per slot
+) -> tuple[dict, jax.Array]:
+    """One serving decode step at a fixed (max_batch, 1) shape.
+
+    The new token is appended at position lengths[b] (its page/offset come
+    from the block table), attention covers lengths + 1 tokens, and rope
+    positions are per-slot (slots decode at different depths in the same
+    jitted step — the continuous-batching contract). Inactive padding
+    slots carry length 0 and all-null table rows: they compute garbage
+    into the reserved null page and are ignored by the scheduler. SSM /
+    conv / cross caches are slot-indexed; their padding rows idle
+    harmlessly. Returns (new_pools, logits (B, vocab)).
+    """
+    x = _embed(cfg, params, tokens)
+    positions = lengths[:, None].astype(jnp.int32)  # (B, 1)
+    if cfg.family in ("dense", "moe"):
+        x, pools = _paged_scan_stack(
+            cfg, params["blocks"], x, positions, pools, table, lengths
+        )
+    elif cfg.family == "ssm":
+        # the recurrent state is a length-independent summary: the paged
+        # interface is the slot adapter, the math is the contiguous step
+        x, pools = _scan_ssm_stack(cfg, params["blocks"], x, pools)
+    elif cfg.family == "hybrid":
+        x, pools = _paged_hybrid(
+            cfg, params, x, positions, pools, table, lengths
+        )
+    elif cfg.family == "encdec":
+        x, pools = _paged_encdec(
+            cfg, params, x, positions, pools, table, lengths
+        )
+    else:
+        raise ValueError(cfg.family)
     logits = _unembed(cfg, params, x[:, -1:])
-    return new_cache, logits[:, 0]
+    return pools, logits[:, 0]
 
 
 def encode_cross_cache(cfg, params, enc_embeds, batch) -> dict:

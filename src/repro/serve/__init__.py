@@ -1,0 +1,23 @@
+"""Serving subsystem: paged KV cache + continuous-batching scheduler.
+
+Three pieces (docs/serving.md):
+
+  cache.py      CachePool — a preallocated KV page pool shared by every
+                sequence, per-slot block tables, host-side page/slot
+                accounting, and slot adapters for the SSM / conv / whisper
+                cross caches.
+  engine.py     generate() — the shared contiguous-cache prefill+decode
+                loop behind launch/serve.py and examples/serve_decode.py
+                (one jitted decode_step, not two).
+  scheduler.py  Scheduler — continuous batching at a fixed max-batch
+                shape: admit between decode steps, evict finished,
+                preempt on pool OOM; per-step ServeStats counters.
+"""
+from repro.serve.cache import CachePool, PoolConfig
+from repro.serve.engine import GenResult, generate
+from repro.serve.scheduler import Request, Scheduler, ServeStats, StepStats
+
+__all__ = [
+    "CachePool", "PoolConfig", "GenResult", "generate",
+    "Request", "Scheduler", "ServeStats", "StepStats",
+]

@@ -1,0 +1,106 @@
+"""Shared generation loop: one jitted decode_step behind every driver.
+
+``launch/serve.py`` and ``examples/serve_decode.py`` used to hand-roll
+identical prefill/decode jits and a python token loop — including
+jitting the SAME ``decode_step`` signature twice.  ``generate()`` is
+that loop, once: a single jitted step per ModelConfig (prefill and
+decode differ only in the token-axis shape, so they are two traces of
+one callable, not two callables), greedy or temperature sampling, and
+wall-clock accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_step(cfg: ModelConfig):
+    """One jitted decode_step per (hashable, frozen) config.
+
+    Prefill reuses this callable at (B, prompt_len); decode at (B, 1).
+    Different shapes mean separate traces but a shared cache — no
+    double-jit of the same signature.
+    """
+    return jax.jit(functools.partial(T.decode_step, cfg))
+
+
+@dataclasses.dataclass
+class GenResult:
+    """Tokens plus timing from one generate() call."""
+
+    tokens: np.ndarray  # (B, max_new_tokens) int32
+    prefill_s: float
+    decode_s: float
+    prompt_tokens: int
+    new_tokens: int
+
+    @property
+    def prefill_tok_s(self) -> float:
+        return self.prompt_tokens / self.prefill_s if self.prefill_s else 0.0
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.new_tokens / self.decode_s if self.decode_s else 0.0
+
+
+def generate(
+    cfg: ModelConfig,
+    params: dict,
+    prompts: jax.Array,  # (B, prompt_len) int token ids
+    *,
+    max_new_tokens: int,
+    temperature: float = 0.0,
+    seed: int = 1,
+    enc_embeds: jax.Array | None = None,
+) -> GenResult:
+    """Prefill the prompts, then decode max_new_tokens greedily (or with
+    temperature sampling).  Contiguous per-request caches — the simple
+    batch path; the scheduler owns the paged continuous-batching path."""
+    B, P = prompts.shape
+    cache = T.init_cache(cfg, B, P + max_new_tokens)
+    if cfg.family == "encdec":
+        if enc_embeds is None:
+            raise ValueError("encdec family needs enc_embeds")
+        cache["cross"] = T.encode_cross_cache(cfg, params, enc_embeds, B)
+    step = _jitted_step(cfg)
+    key = jax.random.PRNGKey(seed)
+
+    t0 = time.time()
+    cache, logits = step(params, prompts, cache)
+    jax.block_until_ready(logits)
+    prefill_s = time.time() - t0
+
+    def sample(logits, key):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / temperature)[:, None]
+        else:
+            tok = jnp.argmax(logits, -1)[:, None]
+        return tok.astype(jnp.int32), key
+
+    out = []
+    tok, key = sample(logits, key)
+    t0 = time.time()
+    for _ in range(max_new_tokens):
+        out.append(tok)
+        cache, logits = step(params, tok, cache)
+        tok, key = sample(logits, key)
+    jax.block_until_ready(tok)
+    decode_s = time.time() - t0
+
+    return GenResult(
+        tokens=np.asarray(jnp.concatenate(out, axis=1)),
+        prefill_s=prefill_s,
+        decode_s=decode_s,
+        prompt_tokens=B * P,
+        new_tokens=B * max_new_tokens,
+    )

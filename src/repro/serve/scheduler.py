@@ -1,0 +1,309 @@
+"""Continuous-batching scheduler over the paged cache pool.
+
+Between decode steps the scheduler admits queued requests into free
+slots (prefill at a fixed ``(1, prompt_pad)`` shape), evicts finished
+sequences, and — when the page pool runs dry mid-decode — preempts the
+youngest active sequence back to the queue.  Decode always runs at the
+fixed ``(max_batch, 1)`` shape with padding lanes masked by length 0
+and null block tables, so the warm runner NEVER recompiles: every jit
+in the loop is shape-stable and trace-counted (``trace_counts``).
+
+Admission policy (documented in docs/serving.md): FIFO, admit while a
+free slot exists and the pool can cover the prompt; a request larger
+than ``prompt_pad`` is rejected at submit.  Preemption restarts the
+victim from scratch — generated tokens are discarded, the original
+request returns to the FRONT of the queue (it was admitted first).
+
+Per-step counters (queue depth, active slots, pool occupancy,
+admissions/evictions/preemptions, tokens generated) accumulate in a
+``ServeStats`` record for benchmarks and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serve.cache import CachePool, PoolConfig, TracedJit
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    enc_embeds (encoder_len, d_model) is required for the encdec
+    family (whisper) and ignored otherwise.
+    """
+
+    rid: int
+    tokens: np.ndarray  # (prompt_len,) int token ids
+    max_new_tokens: int
+    enc_embeds: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class StepStats:
+    """Counters for one scheduler step (recorded after admission)."""
+
+    step: int
+    queue_depth: int
+    active_slots: int
+    pool_occupancy: float
+    admitted: int
+    finished: int
+    preempted: int
+    tokens_generated: int
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Per-step counter trace for a scheduler run."""
+
+    steps: list[StepStats] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(s.tokens_generated for s in self.steps)
+
+    @property
+    def peak_active(self) -> int:
+        return max((s.active_slots for s in self.steps), default=0)
+
+    @property
+    def peak_occupancy(self) -> float:
+        return max((s.pool_occupancy for s in self.steps), default=0.0)
+
+    @property
+    def preemptions(self) -> int:
+        return sum(s.preempted for s in self.steps)
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    generated: list[int]
+    target: int  # total tokens to generate (capped by pool max_len)
+
+
+class Scheduler:
+    """Continuous batching: fixed-shape decode, dynamic membership."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: dict,
+        pool_cfg: PoolConfig,
+        *,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.pool = CachePool(cfg, pool_cfg)
+        self.temperature = temperature
+        self._rng = np.random.default_rng(seed)
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, _Active] = {}
+        self._admit_order: list[int] = []  # slots, oldest admission first
+        self._cur_tok = np.zeros((pool_cfg.max_batch, 1), np.int32)
+        self.results: dict[int, np.ndarray] = {}
+        self.stats = ServeStats()
+        self._step_idx = 0
+        self._prefill = TracedJit(functools.partial(T.prefill, cfg))
+        self._decode = TracedJit(functools.partial(T.decode_step_paged, cfg))
+        self._encode = TracedJit(
+            lambda p, e: T.encode_cross_cache(cfg, p, e, 1)
+        )
+
+    @property
+    def trace_counts(self) -> dict[str, int]:
+        """Jit trace counts — the zero-recompile-after-warmup witness."""
+        return {
+            "prefill": self._prefill.traces,
+            "decode": self._decode.traces,
+            "encode": self._encode.traces,
+            "pool": self.pool.trace_count,
+        }
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        plen = len(req.tokens)
+        pc = self.pool.pc
+        if not 1 <= plen <= pc.prompt_pad:
+            raise ValueError(
+                f"prompt length {plen} not in [1, prompt_pad={pc.prompt_pad}]"
+            )
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if self.cfg.family == "encdec" and req.enc_embeds is None:
+            raise ValueError("encdec requests need enc_embeds")
+        self.queue.append(req)
+
+    # -- sampling -----------------------------------------------------------
+
+    def _sample(self, logits_row: np.ndarray) -> int:
+        if self.temperature > 0:
+            g = self._rng.gumbel(size=logits_row.shape)
+            return int(np.argmax(logits_row / self.temperature + g))
+        return int(np.argmax(logits_row))
+
+    # -- admission ----------------------------------------------------------
+
+    def _finish(self, slot: int) -> None:
+        st = self.active.pop(slot)
+        self._admit_order.remove(slot)
+        self.results[st.req.rid] = np.asarray(st.generated, np.int32)
+        self.pool.release(slot)
+
+    def _admit_one(self) -> bool:
+        req = self.queue[0]
+        plen = len(req.tokens)
+        slot = self.pool.alloc_slot()
+        if slot is None:
+            return False
+        if not self.pool.ensure(slot, plen):
+            self.pool.release(slot)  # returns the empty slot
+            return False
+        self.queue.popleft()
+        pc = self.pool.pc
+
+        padded = np.zeros((1, pc.prompt_pad), np.int64)
+        padded[0, :plen] = np.asarray(req.tokens)
+        cache = T.init_cache(self.cfg, 1, pc.prompt_pad)
+        if self.cfg.family == "encdec":
+            cache["cross"] = self._encode(
+                self.params, jnp.asarray(req.enc_embeds)[None]
+            )
+        cache, logits = self._prefill(
+            self.params, jnp.asarray(padded), cache,
+            valid_len=jnp.asarray([plen], jnp.int32),
+        )
+        self.pool.write_prefill(slot, cache)
+        self.pool.set_length(slot, plen)
+
+        # the prefill logits already yield the first generated token: a
+        # decode step per NEW token, not per request token
+        g0 = self._sample(np.asarray(logits)[0])
+        target = min(req.max_new_tokens, pc.max_len - plen + 1)
+        st = _Active(req, [g0], target)
+        if target <= 1:
+            self.results[req.rid] = np.asarray(st.generated, np.int32)
+            self.pool.release(slot)
+            return True
+        self.active[slot] = st
+        self._admit_order.append(slot)
+        self._cur_tok[slot, 0] = g0
+        return True
+
+    def _admit(self) -> int:
+        admitted = 0
+        while self.queue and self._admit_one():
+            admitted += 1
+        return admitted
+
+    # -- preemption ---------------------------------------------------------
+
+    def _preempt_youngest(self, protect: int) -> bool:
+        """Evict the most recently admitted active slot (except
+        `protect`) back to the queue front, discarding its progress."""
+        for slot in reversed(self._admit_order):
+            if slot == protect:
+                continue
+            st = self.active.pop(slot)
+            self._admit_order.remove(slot)
+            self.pool.release(slot)
+            self._cur_tok[slot, 0] = 0
+            self.queue.appendleft(st.req)
+            return True
+        return False
+
+    def _ensure_capacity(self) -> int:
+        """Every active slot gets a page for this step's K/V write —
+        preempting youngest-first when the pool runs dry."""
+        preempted = 0
+        for slot in list(self._admit_order):
+            if slot not in self.active:
+                continue
+            need = int(self.pool.lengths[slot]) + 1
+            while not self.pool.ensure(slot, need):
+                if not self._preempt_youngest(protect=slot):
+                    raise RuntimeError(
+                        "page pool too small for a single sequence: "
+                        f"slot {slot} needs {need} tokens, "
+                        f"{self.pool.free_page_count} pages free"
+                    )
+                preempted += 1
+        return preempted
+
+    # -- the step -----------------------------------------------------------
+
+    def step(self) -> StepStats:
+        """Admit, ensure capacity (preempting if needed), decode one
+        token for every active slot, evict finished sequences."""
+        admitted = self._admit()
+        preempted = self._ensure_capacity()
+        finished = 0
+        tokens_generated = 0
+
+        if self.active:
+            pools, logits = self._decode(
+                self.params,
+                jnp.asarray(self._cur_tok),
+                self.pool.pools,
+                self.pool.device_table(),
+                self.pool.device_lengths(),
+            )
+            self.pool.pools = pools
+            logits_np = np.asarray(logits)
+            slots = list(self._admit_order)
+            self.pool.bump_lengths(slots)
+            for slot in slots:
+                st = self.active[slot]
+                nxt = self._sample(logits_np[slot])
+                st.generated.append(nxt)
+                self._cur_tok[slot, 0] = nxt
+                tokens_generated += 1
+                if len(st.generated) >= st.target:
+                    self._finish(slot)
+                    finished += 1
+
+        stats = StepStats(
+            step=self._step_idx,
+            queue_depth=len(self.queue),
+            active_slots=len(self.active),
+            pool_occupancy=self.pool.occupancy(),
+            admitted=admitted,
+            finished=finished,
+            preempted=preempted,
+            tokens_generated=tokens_generated,
+        )
+        self.stats.steps.append(stats)
+        self._step_idx += 1
+        return stats
+
+    def run(
+        self,
+        requests: list[Request] | None = None,
+        *,
+        max_steps: int | None = None,
+    ) -> tuple[dict[int, np.ndarray], ServeStats]:
+        """Drain the queue: step until every request completes.
+
+        Returns ({rid: generated token ids}, per-step ServeStats).
+        """
+        for req in requests or ():
+            self.submit(req)
+        limit = max_steps if max_steps is not None else 100_000
+        steps = 0
+        while (self.queue or self.active) and steps < limit:
+            self.step()
+            steps += 1
+        if self.queue or self.active:
+            raise RuntimeError(f"scheduler did not drain in {limit} steps")
+        return self.results, self.stats

@@ -82,6 +82,29 @@ def test_main_unions_informational_from_both_payloads(tmp_path, monkeypatch,
     capsys.readouterr()
 
 
+def test_serve_entries_tagged_informational(capsys):
+    """The serving family: a 10x 'regression' in container-timed decode
+    throughput reports but never gates (same contract as comm_sharded)."""
+    base = {"serve_decode_b64": 100.0, "hot": 100.0}
+    new = {"serve_decode_b64": 1000.0, "hot": 100.0}
+    failures = C.compare(base, new, 1.5, informational={"serve_decode_b64"})
+    assert failures == []
+    out = capsys.readouterr().out
+    assert "INFO     serve_decode_b64" in out
+
+
+def test_run_payload_tags_serve_informational():
+    """benchmarks.run must tag every serve_* row informational in the
+    JSON payload compare.py consumes."""
+    from benchmarks.run import informational_entries
+
+    rows = [("serve_decode_b1", 10.0, ""), ("serve_decode_b512", 10.0, ""),
+            ("dsba_step_d2000", 10.0, "")]
+    assert informational_entries(rows) == [
+        "serve_decode_b1", "serve_decode_b512"
+    ]
+
+
 def test_unknown_schema_rejected(tmp_path):
     p = tmp_path / "x.json"
     p.write_text(json.dumps({"schema": 99, "entries": {}}))

@@ -30,6 +30,18 @@ def _example_args(name, key, dtype=jnp.float32, small=True):
         k = jax.random.normal(ks[1], (B, Hkv, S, D), dtype)
         v = jax.random.normal(ks[2], (B, Hkv, S, D), dtype)
         return (q, k, v), {"causal": True}
+    if name == "decode_attention":
+        B, Hq, Hkv, D, bs, nb, npg = (
+            (2, 4, 2, 24, 8, 9, 3) if small else (4, 8, 2, 64, 16, 33, 6)
+        )
+        q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+        kp = jax.random.normal(ks[1], (nb, bs, Hkv, D), dtype)
+        vp = jax.random.normal(ks[2], (nb, bs, Hkv, D), dtype)
+        table = jax.random.randint(ks[3], (B, npg), 1, nb).astype(jnp.int32)
+        lengths = jnp.asarray(
+            [npg * bs - 3, 0, 1, 5][:B], jnp.int32
+        )
+        return (q, kp, vp, table, lengths), {"window": 7, "softcap": 30.0}
     if name == "ssd_chunk":
         B, nc, Q, nh, hd, ds = (1, 2, 32, 2, 16, 8) if small else (2, 2, 64, 4, 32, 16)
         xdt = jax.random.normal(ks[0], (B, nc, Q, nh, hd), dtype)
@@ -66,8 +78,8 @@ def _example_args(name, key, dtype=jnp.float32, small=True):
 
 def test_registry_is_complete():
     assert ops.registered_kernels() == (
-        "block_topk", "flash_attention", "sparse_axpy", "sparse_dot",
-        "ssd_chunk",
+        "block_topk", "decode_attention", "flash_attention", "sparse_axpy",
+        "sparse_dot", "ssd_chunk",
     )
 
 
@@ -112,11 +124,13 @@ def test_tolerance_fallback_to_f32():
 @pytest.mark.parametrize("small", [True, False])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_interpret_matches_ref_within_declared_tol(name, small, dtype):
-    if dtype == jnp.bfloat16 and name != "flash_attention":
+    if dtype == jnp.bfloat16 and name not in (
+        "flash_attention", "decode_attention"
+    ):
         # DSBA/selection kernels are f32/f64 paths; ssd_chunk's oracle
         # accumulates in the input dtype, so bf16 parity is not a kernel
         # property (models/ssm.py always feeds it f32)
-        pytest.skip("bf16 policy only declared for flash_attention")
+        pytest.skip("bf16 policy only declared for the attention kernels")
     args, kw = _example_args(name, jax.random.PRNGKey(0), dtype, small)
     err = ops.parity_check(name, *args, use_pallas="interpret", **kw)
     assert np.isfinite(err)

@@ -209,3 +209,53 @@ def test_synthetic_rows_normalized_distinct_indices(n, q, d, k, seed):
         for qq in range(q):
             row = data.idx[nn, qq]
             assert len(set(row.tolist())) == k
+
+
+# ---------------------------------------------------------------------------
+# serving: page-pool conservation
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 20), st.lists(st.tuples(st.integers(0, 2),
+                                              st.integers(1, 32)),
+                                    max_size=25),
+       st.integers(0, 1000))
+def test_cache_pool_never_leaks_pages(n_blocks, ops, seed):
+    """Random admit/grow/evict sequences conserve the page pool: every
+    page is either free or held by exactly one slot, the null page is
+    never handed out, and draining returns the pool to pristine."""
+    from repro.configs import get_reduced
+    from repro.serve import CachePool, PoolConfig
+
+    rng = np.random.default_rng(seed)
+    pool = CachePool(get_reduced("minitron_8b"), PoolConfig(
+        max_batch=4, block_size=4, n_blocks=n_blocks, max_len=32,
+        prompt_pad=8,
+    ))
+    live = {}
+    for op, arg in ops:
+        if op == 0:  # admit
+            slot = pool.alloc_slot()
+            if slot is None:
+                continue
+            if pool.ensure(slot, arg):
+                live[slot] = arg
+            else:
+                pool.release(slot)
+        elif op == 1 and live:  # grow
+            slot = int(rng.choice(list(live)))
+            want = max(arg, live[slot])
+            if pool.ensure(slot, want):
+                live[slot] = want
+        elif op == 2 and live:  # evict
+            slot = int(rng.choice(list(live)))
+            pool.release(slot)
+            del live[slot]
+        held = [p for pages in pool._pages_of for p in pages]
+        assert 0 not in held and 0 not in pool._free_pages
+        assert len(set(held)) == len(held)
+        assert sorted(held + pool._free_pages) == list(range(1, n_blocks))
+    for slot in list(live):
+        pool.release(slot)
+    assert pool.free_page_count == n_blocks - 1
+    assert pool.free_slot_count == 4

@@ -1,0 +1,297 @@
+"""Serving subsystem tests: paged cache, scheduler, decode parity.
+
+Three claims (ISSUE 9 acceptance):
+  1. every servable reduced config prefills + decodes through the
+     continuous-batching scheduler (smoke, all ARCH_IDS);
+  2. paged-cache decode logits match contiguous-cache decode within the
+     registered decode_attention kernel tolerance (dense GQA, MQA,
+     windowed gemma2, ssm, encdec + one Pallas-interpret run);
+  3. the page pool never leaks or double-books a page across random
+     admit/grow/evict episodes, and a 64-request trace triggers zero
+     recompiles after warmup (jit trace counts frozen).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.kernels import ops as KO
+from repro.models import transformer as T
+from repro.models.params import tree_materialize
+from repro.serve import CachePool, PoolConfig, Request, Scheduler
+
+_PC = PoolConfig(
+    max_batch=3, block_size=8, n_blocks=24, max_len=32, prompt_pad=16
+)
+
+
+def _make(arch, **over):
+    cfg = get_reduced(arch)
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    params = tree_materialize(
+        T.model_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype
+    )
+    return cfg, params
+
+
+def _requests(cfg, n, max_new, seed=0, prompt_pad=16):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        kw = {}
+        if cfg.family == "encdec":
+            kw["enc_embeds"] = np.asarray(jax.random.normal(
+                jax.random.PRNGKey(100 + i), (cfg.encoder_len, cfg.d_model)
+            ))
+        plen = int(rng.integers(3, prompt_pad - 1))
+        reqs.append(Request(
+            rid=i, tokens=rng.integers(0, cfg.vocab_size, size=plen),
+            max_new_tokens=max_new, **kw,
+        ))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# 1. smoke: every servable config through the scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_scheduler_smoke_decode(arch):
+    cfg, params = _make(arch)
+    sch = Scheduler(cfg, params, _PC)
+    results, stats = sch.run(_requests(cfg, 2, 4))
+    assert set(results) == {0, 1}
+    for toks in results.values():
+        assert toks.shape == (4,)
+        assert toks.dtype == np.int32
+        assert np.all((0 <= toks) & (toks < cfg.vocab_size))
+    # one token per request comes from prefill logits; three from decode
+    assert stats.total_tokens == 2 * 3
+    # shape-stable loop: exactly one trace per jitted piece
+    assert sch.trace_counts["prefill"] == 1
+    assert sch.trace_counts["decode"] == 1
+
+
+# ---------------------------------------------------------------------------
+# 2. paged vs contiguous decode parity (logits, kernel tolerance)
+# ---------------------------------------------------------------------------
+
+# dense GQA, MQA, windowed local/global, ssm, hybrid, encdec — plus one
+# run through the Pallas interpreter to cover the real kernel's masking
+_PARITY = {
+    "dense_gqa": ("minitron_8b", {}),
+    "dense_mqa": ("minitron_8b", {"n_kv_heads": 1}),
+    "windowed": ("gemma2_2b", {}),
+    "ssm": ("mamba2_1p3b", {}),
+    "hybrid": ("zamba2_1p2b", {}),
+    "encdec": ("whisper_small", {}),
+    "interpret": ("minitron_8b", {"decode_kernel": "interpret"}),
+}
+
+
+@pytest.mark.parametrize("variant", sorted(_PARITY))
+def test_paged_matches_contiguous(variant):
+    arch, over = _PARITY[variant]
+    cfg, params = _make(arch, compute_dtype=jnp.float32, **over)
+    plen, n_new = 11, 5  # prompt deliberately not a page multiple
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(3), (1, plen), 0, cfg.vocab_size
+    )
+    enc = None
+    if cfg.family == "encdec":
+        enc = jax.random.normal(
+            jax.random.PRNGKey(4), (1, cfg.encoder_len, cfg.d_model)
+        )
+
+    # contiguous reference: prefill + greedy decode, collecting logits
+    cache = T.init_cache(cfg, 1, plen + n_new)
+    if enc is not None:
+        cache["cross"] = T.encode_cross_cache(cfg, params, enc, 1)
+    cache, lg = T.prefill(cfg, params, tokens, cache)
+    want = [np.asarray(lg)[0]]
+    toks = [int(np.argmax(want[-1]))]
+    for _ in range(n_new - 1):
+        cache, lg = T.decode_step(
+            cfg, params, jnp.asarray([[toks[-1]]]), cache
+        )
+        want.append(np.asarray(lg)[0])
+        toks.append(int(np.argmax(want[-1])))
+
+    # paged path: same tokens through the pool at padded/fixed shapes
+    pc = _PC
+    pool = CachePool(cfg, pc)
+    slot = pool.alloc_slot()
+    assert pool.ensure(slot, plen)
+    padded = jnp.zeros((1, pc.prompt_pad), tokens.dtype).at[:, :plen].set(
+        tokens
+    )
+    pcache = T.init_cache(cfg, 1, pc.prompt_pad)
+    if enc is not None:
+        pcache["cross"] = T.encode_cross_cache(cfg, params, enc, 1)
+    pcache, lg = T.prefill(
+        cfg, params, padded, pcache, valid_len=jnp.asarray([plen], jnp.int32)
+    )
+    pool.write_prefill(slot, pcache)
+    pool.set_length(slot, plen)
+    got = [np.asarray(lg)[0]]
+    for t in toks[:-1]:
+        assert pool.ensure(slot, int(pool.lengths[slot]) + 1)
+        batch_tok = np.zeros((pc.max_batch, 1), np.int32)
+        batch_tok[slot, 0] = t
+        pool.pools, lg = T.decode_step_paged(
+            cfg, params, jnp.asarray(batch_tok), pool.pools,
+            pool.device_table(), pool.device_lengths(),
+        )
+        pool.bump_lengths([slot])
+        got.append(np.asarray(lg)[slot])
+
+    tol = KO.get_kernel("decode_attention").tolerance(jnp.float32)
+    # the kernel tolerance bounds ONE attention output; logits see it
+    # through n_layers residual adds, so scale atol by the layer count
+    depth = max(cfg.n_layers, 1)
+    np.testing.assert_allclose(
+        np.stack(got), np.stack(want),
+        rtol=tol.rtol * depth, atol=tol.atol * depth,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 3a. pool accounting: no page leaked or double-booked (100 episodes)
+# ---------------------------------------------------------------------------
+
+def _check_pool_invariants(pool):
+    held = [p for pages in pool._pages_of for p in pages]
+    free = pool._free_pages
+    assert 0 not in held, "null page handed out"
+    assert 0 not in free, "null page in the free list"
+    assert len(set(held)) == len(held), "page double-booked"
+    assert len(set(free)) == len(free), "free list duplicate"
+    assert sorted(held + free) == list(range(1, pool.pc.n_blocks)), (
+        "pages leaked or invented"
+    )
+    for slot, pages in enumerate(pool._pages_of):
+        assert list(pool.table[slot, : len(pages)]) == pages
+        assert np.all(pool.table[slot, len(pages):] == 0)
+
+
+def test_no_page_leak_100_random_episodes():
+    """Random admit/grow/evict sequences conserve the page pool exactly.
+
+    (The hypothesis-driven twin lives in test_property.py; this seeded
+    version keeps the invariant in the tier-1 run even where hypothesis
+    is not installed.)
+    """
+    cfg = get_reduced("minitron_8b")
+    rng = np.random.default_rng(42)
+    for _ in range(100):
+        pc = PoolConfig(
+            max_batch=4, block_size=4,
+            n_blocks=int(rng.integers(3, 20)), max_len=32, prompt_pad=8,
+        )
+        pool = CachePool(cfg, pc)
+        live: dict[int, int] = {}  # slot -> ensured tokens
+        for _ in range(30):
+            op = rng.integers(0, 3)
+            if op == 0:  # admit
+                slot = pool.alloc_slot()
+                if slot is None:
+                    continue
+                want = int(rng.integers(1, pc.max_len + 1))
+                if pool.ensure(slot, want):
+                    live[slot] = want
+                else:
+                    pool.release(slot)
+            elif op == 1 and live:  # grow
+                slot = int(rng.choice(list(live)))
+                want = int(rng.integers(live[slot], pc.max_len + 1))
+                if pool.ensure(slot, want):
+                    live[slot] = want
+            elif op == 2 and live:  # evict
+                slot = int(rng.choice(list(live)))
+                pool.release(slot)
+                del live[slot]
+            _check_pool_invariants(pool)
+        for slot in list(live):
+            pool.release(slot)
+        _check_pool_invariants(pool)
+        assert pool.free_page_count == pc.n_blocks - 1
+        assert pool.free_slot_count == pc.max_batch
+
+
+# ---------------------------------------------------------------------------
+# 3b. continuous batching: 64-request churn, zero recompiles after warmup
+# ---------------------------------------------------------------------------
+
+def test_zero_recompiles_after_warmup_64_requests():
+    cfg, params = _make("minitron_8b")
+    pc = PoolConfig(
+        max_batch=8, block_size=8, n_blocks=48, max_len=32, prompt_pad=16
+    )
+    sch = Scheduler(cfg, params, pc)
+    # warmup: one short request compiles every jitted piece
+    sch.run(_requests(cfg, 1, 2, seed=1))
+    warm = dict(sch.trace_counts)
+
+    rng = np.random.default_rng(2)
+    reqs = []
+    for i in range(64):
+        plen = int(rng.integers(1, pc.prompt_pad + 1))
+        reqs.append(Request(
+            rid=100 + i, tokens=rng.integers(0, cfg.vocab_size, size=plen),
+            max_new_tokens=int(rng.integers(1, 8)),
+        ))
+    results, stats = sch.run(reqs)
+    assert len(results) == 64 + 1  # warmup request included
+    assert sch.trace_counts == warm, (
+        f"recompiled after warmup: {sch.trace_counts} != {warm}"
+    )
+    assert stats.peak_active == pc.max_batch  # batching actually happened
+
+
+# ---------------------------------------------------------------------------
+# edges: admission validation, preemption, instant finish
+# ---------------------------------------------------------------------------
+
+def test_submit_validation():
+    cfg, params = _make("minitron_8b")
+    sch = Scheduler(cfg, params, _PC)
+    with pytest.raises(ValueError, match="prompt length"):
+        sch.submit(Request(0, np.zeros(17, np.int64), 4))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sch.submit(Request(0, np.zeros(4, np.int64), 0))
+
+
+def test_max_new_tokens_one_finishes_at_admit():
+    """The prefill logits already yield one token — no decode step."""
+    cfg, params = _make("minitron_8b")
+    sch = Scheduler(cfg, params, _PC)
+    results, stats = sch.run(
+        [Request(7, np.arange(5, dtype=np.int64), max_new_tokens=1)]
+    )
+    assert results[7].shape == (1,)
+    assert stats.total_tokens == 0  # never hit the decode loop
+    assert sch.pool.free_slot_count == _PC.max_batch
+
+
+def test_oom_preemption_restarts_victim():
+    """A pool too small for all admitted sequences preempts the
+    youngest back to the queue, and every request still completes."""
+    cfg, params = _make("minitron_8b")
+    # 7 allocatable pages of 4 tokens: two 16-token sequences cannot
+    # coexist at full length
+    pc = PoolConfig(
+        max_batch=2, block_size=4, n_blocks=8, max_len=16, prompt_pad=8
+    )
+    sch = Scheduler(cfg, params, pc)
+    reqs = [
+        Request(i, np.arange(1, 7, dtype=np.int64), max_new_tokens=10)
+        for i in range(2)
+    ]
+    results, stats = sch.run(reqs)
+    assert set(results) == {0, 1}
+    assert all(r.shape == (10,) for r in results.values())
+    assert stats.preemptions >= 1
