@@ -19,6 +19,9 @@ their forward twins).
                convergence/communication tables
   serve        continuous-batching decode throughput at batch 1/64/512
                (`serve_*`, informational — container-timed)
+  faults       link-fault degradation curves on the dense backend
+               (`faults_*`, informational — the curve lives in the
+               derived column)
   all          everything (default)
 """
 from __future__ import annotations
@@ -324,15 +327,44 @@ def bench_serve(rows, fast):
         ))
 
 
+def bench_faults(rows, fast):
+    """Fault-injection degradation curves (bench-group ``faults``).
+
+    Iterations-to-``dist2 <= 1e-6`` vs link drop rate p in {0, .1, .2, .4}
+    for dsba/dsa/mudag on the dense backend (benchmarks/bench_faults.py).
+    At p=0 the derived column carries the iteration count; at p>0 the run
+    converges to a bias neighborhood (iid drops + row renormalization
+    inject mixing noise every round), so it carries the plateau level
+    instead — which grows with p. ALL ``faults_*`` entries are tagged
+    informational in the JSON payload: the timing is a container-timed
+    whole-solve wall clock; the curve in the derived column is the
+    meaningful output.
+    """
+    from benchmarks import bench_faults as BF
+
+    for r in BF.measure(fast=fast):
+        it = r["iters_to_tol"]
+        curve = (
+            f"iters_to_1e-6={it}" if it is not None
+            else f"never<=1e-6 in {r['steps']} plateau={r['plateau']:.1e}"
+        )
+        rows.append((
+            f"faults_{r['method']}_p{r['p']:g}", r["us"],
+            f"{curve} dense link-drop p={r['p']:g}",
+        ))
+
+
 def informational_entries(rows) -> list[str]:
     """Entries compare.py reports but never gates: mesh-backend rows mix
     modeled and measured communication, the PR 7 rows (bilinear figure,
     mudag-vs-dsa round ratio) report convergence facts rather than
     latencies, and the serving rows time host scheduler + device decode
-    in one container-noisy number."""
+    in one container-noisy number, and the fault rows report degradation
+    curves (iterations / plateau levels) rather than latencies."""
     return sorted(
         name for name, _, _ in rows
-        if name.startswith(("comm_sharded_", "paper_accel_", "serve_"))
+        if name.startswith(("comm_sharded_", "paper_accel_", "serve_",
+                            "faults_"))
         or name == "paper_fig_bilinear"
     )
 
@@ -343,13 +375,14 @@ def main():
     ap.add_argument(
         "--bench-group",
         choices=("kernels", "sweep", "convergence", "comm-sharded", "serve",
-                 "all"),
+                 "faults", "all"),
         default="all",
         help="kernels = dsba/kernel-fwd+bwd/gossip/sweep timings (what CI "
              "gates); sweep = just the sweep-engine entries; convergence = "
              "the paper's convergence + communication tables; comm-sharded "
              "= the node-mesh scaling sweep (informational entries); serve "
-             "= continuous-batching decode throughput (informational)",
+             "= continuous-batching decode throughput (informational); "
+             "faults = link-fault degradation curves (informational)",
     )
     ap.add_argument(
         "--json", default=None, metavar="PATH",
@@ -374,6 +407,8 @@ def main():
         bench_comm_sharded(rows, args.fast)
     if args.bench_group in ("serve", "all"):
         bench_serve(rows, args.fast)
+    if args.bench_group in ("faults", "all"):
+        bench_faults(rows, args.fast)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:

@@ -1,5 +1,8 @@
 from repro.ckpt.checkpoint import (  # noqa: F401
     CheckpointManager,
+    CheckpointSpec,
+    committed_steps,
+    load_checkpoint,
     restore_checkpoint,
     save_checkpoint,
 )

@@ -20,6 +20,7 @@ replicas, paper-core DSBA state).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import pathlib
 import shutil
@@ -27,6 +28,33 @@ import threading
 
 import jax
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointSpec:
+    """How ``solve(..., checkpoint=...)`` snapshots a run.
+
+    ``directory``: where the ``step_<N>`` checkpoint dirs go.
+    ``every``: checkpoint period in solver ITERATIONS; on the dense
+    backend it must be a multiple of ``record_every`` (snapshots happen
+    at record boundaries, where the chunked scan already pauses).
+    ``keep_last``: how many committed checkpoints to retain.
+
+    ``solve(..., resume=directory)`` restores the newest committed
+    checkpoint and continues BIT-EQUAL to an uninterrupted run: solver
+    state, recorder contents, and the sample-stream position all resume
+    exactly (the per-node index streams are prefix-stable in ``steps``
+    by construction — ``draw_indices`` fills row-major).
+    """
+
+    directory: str | pathlib.Path
+    every: int
+    keep_last: int = 3
+
+    def __post_init__(self):
+        """Validate the checkpoint period."""
+        if int(self.every) < 1:
+            raise ValueError(f"checkpoint every={self.every} must be >= 1")
 
 
 def _flatten_with_paths(tree):
@@ -109,6 +137,35 @@ def restore_checkpoint(directory, tree_like, step: int | None = None):
             arr, dtype=like.dtype if hasattr(like, "dtype") else None
         ))
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+def load_checkpoint(directory, step: int | None = None):
+    """Load a committed checkpoint WITHOUT a template tree.
+
+    Returns ``(step, metadata, {path: np.ndarray})`` for the newest (or
+    requested) committed step, or ``(None, None, None)`` when the
+    directory holds no committed checkpoint. The loose counterpart of
+    ``restore_checkpoint`` for callers whose tree structure depends on
+    run-length state (``solve()``'s recorder arrays grow with the number
+    of record points, so a strict structural restore cannot be templated
+    before reading the checkpoint).
+    """
+    directory = pathlib.Path(directory)
+    steps = committed_steps(directory)
+    if not steps:
+        return None, None, None
+    step = steps[-1] if step is None else step
+    if step not in steps:
+        raise ValueError(
+            f"no committed checkpoint for step {step} in {directory}; "
+            f"committed: {steps}"
+        )
+    d = directory / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves = {
+        e["path"]: np.load(d / e["file"]) for e in manifest["leaves"]
+    }
+    return step, manifest.get("metadata", {}), leaves
 
 
 class CheckpointManager:

@@ -172,3 +172,187 @@ class ShardedComm:
         """This device's node block: row ``axis_index('node')`` of ``x``."""
         i = lax.axis_index(self.axis)
         return lax.dynamic_slice_in_dim(x, i, 1, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Fault-injecting backends (ft.faults plans, resolved to per-step masks)
+# ---------------------------------------------------------------------------
+
+
+class FaultyDenseComm(DenseComm):
+    """DenseComm with link-drop masks and straggler delivery buffers.
+
+    The fault runner in ``core.solvers`` drives the trace-time context:
+    inside the scan body it calls ``begin_step(mask_t, deliv_t, bufs)``
+    before the solver step and ``end_step()`` after, so the ``mix``
+    closures (created once at factory time) read the CURRENT iteration's
+    masks and buffers as captured tracers.
+
+    Link faults (``has_link``): ``mix`` becomes a masked matvec with
+    row-renormalization — dropped neighbor entries are zeroed and their
+    mass redirected to the receiver's own (always fresh) value, so a
+    row-stochastic ``W`` stays row-stochastic under any drop pattern.
+
+    Stragglers (``has_straggler``): each ``mix`` invocation owns one
+    last-delivered-value buffer slot, consumed in trace order (the same
+    order every trace, since the step function is fixed). A sender whose
+    ``deliv_t`` bit is off contributes its buffered value instead of the
+    fresh one; the buffer then carries whatever value receivers actually
+    used. The diagonal (self) term always reads the fresh value — a node
+    never straggles to itself. Slot shapes are discovered by an abstract
+    probe evaluation of the step function (``begin_probe``/``end_probe``)
+    before the runner's scan carry is assembled.
+    """
+
+    name = "dense"
+
+    def __init__(self, graph: Graph, has_link: bool, has_straggler: bool):
+        """Bind the graph and which fault families are active."""
+        super().__init__(graph)
+        self.has_link = bool(has_link)
+        self.has_straggler = bool(has_straggler)
+        self._probing = False
+        self._probe_shapes: list[jax.ShapeDtypeStruct] = []
+        self._mask = None
+        self._deliv = None
+        self._bufs: tuple = ()
+        self._new_bufs: list = []
+        self._slot = 0
+
+    # -- trace-time context driven by the fault runner ----------------------
+
+    def begin_probe(self) -> None:
+        """Enter shape-probe mode: ``mix`` runs plain, ``_use`` records."""
+        self._probing = True
+        self._probe_shapes = []
+
+    def end_probe(self) -> list:
+        """Leave probe mode; the recorded buffer slot shapes, in order."""
+        self._probing = False
+        shapes, self._probe_shapes = self._probe_shapes, []
+        return shapes
+
+    def begin_step(self, mask, deliv, bufs) -> None:
+        """Install this iteration's masks and buffers (scan-body call)."""
+        self._mask = mask
+        self._deliv = deliv
+        self._bufs = bufs
+        self._new_bufs = []
+        self._slot = 0
+
+    def end_step(self) -> tuple:
+        """The updated buffer tuple for the scan carry."""
+        new = tuple(self._new_bufs)
+        self._mask = self._deliv = None
+        self._bufs, self._new_bufs = (), []
+        return new
+
+    def _use(self, x: jax.Array) -> jax.Array:
+        """The value receivers see from each sender: fresh or buffered."""
+        if not self.has_straggler:
+            return x
+        if self._probing:
+            self._probe_shapes.append(jax.ShapeDtypeStruct(x.shape, x.dtype))
+            return x
+        buf = self._bufs[self._slot]
+        self._slot += 1
+        d = self._deliv.reshape((-1,) + (1,) * (x.ndim - 1))
+        x_used = jnp.where(d, x, buf)
+        self._new_bufs.append(x_used)
+        return x_used
+
+    def matvec(self, m: np.ndarray, dtype) -> Callable[[jax.Array], jax.Array]:
+        """``mix(X) = M_eff(t) @ X_used(t)``: masked rows, buffered senders."""
+        m_j = jnp.asarray(m, dtype)
+        diag_j = jnp.asarray(np.diag(np.asarray(m)).copy(), dtype)
+
+        def col(v, x):
+            return v.reshape((-1,) + (1,) * (x.ndim - 1))
+
+        def mix(x):
+            if self._probing:
+                return m_j @ self._use(x)
+            x_used = self._use(x)
+            if self.has_link:
+                mask = self._mask
+                zero = jnp.zeros((), dtype)
+                kept = jnp.where(mask, m_j, zero)
+                dropped = jnp.where(mask, zero, m_j).sum(axis=1)
+                # dropped neighbor mass redirects to self — always fresh
+                out = kept @ x_used + col(dropped, x) * x
+            else:
+                out = m_j @ x_used
+            if self.has_straggler:
+                # the self term must read the fresh value, not the buffer
+                out = out + col(diag_j, x) * (x - x_used)
+            return out
+
+        return mix
+
+
+class FaultyShardedComm(ShardedComm):
+    """ShardedComm with a per-step link delivery mask (no stragglers).
+
+    Each edge-color ``ppermute`` still executes physically — a dropped
+    message is discarded at the RECEIVER (its weight is zeroed and the
+    mass redirected to self), so the HLO-measured collective bytes are
+    identical to the fault-free program while the modeled
+    ``doubles_received`` accounting counts only delivered traffic
+    (docs/solvers.md). The mask arrives replicated; each device reads its
+    own row and, per color, the bit of its peer in that matching.
+    """
+
+    name = "sharded"
+
+    def __init__(self, graph: Graph, mesh: jax.sharding.Mesh):
+        """Precompute, per color, each node's peer index in the matching."""
+        super().__init__(graph, mesh)
+        self.srcs = []
+        for color in self.colors:
+            src = np.arange(graph.n)
+            for i, j in color:
+                src[i] = j
+                src[j] = i
+            self.srcs.append(jnp.asarray(src, jnp.int32))
+        self._mask = None
+
+    def begin_step(self, mask) -> None:
+        """Install this iteration's (N, N) delivery mask (scan-body call)."""
+        self._mask = mask
+
+    def end_step(self) -> None:
+        """Clear the per-step mask (no carried buffers on this backend)."""
+        self._mask = None
+
+    def matvec(self, m: np.ndarray, dtype) -> Callable[[jax.Array], jax.Array]:
+        """Masked, renormalized ``mix``: ppermute everything, keep delivered."""
+        m = np.asarray(m)
+        _check_support(m, self.graph)
+        diag_j = jnp.asarray(np.diag(m).copy(), dtype)
+        wrecvs = []
+        for color in self.colors:
+            wrecv = np.zeros(self.graph.n, dtype=m.dtype)
+            for i, j in color:
+                wrecv[i] = m[i, j]
+                wrecv[j] = m[j, i]
+            wrecvs.append(jnp.asarray(wrecv, dtype))
+
+        def shaped(w_col, x):
+            return w_col.reshape((-1,) + (1,) * (x.ndim - 1))
+
+        def mix(x):
+            mask_row = self.local(self._mask)[0]  # (N,) — this node's row
+            out = shaped(self.local(diag_j), x) * x
+            dropped = jnp.zeros((1,) + (1,) * (x.ndim - 1), dtype)
+            for perm, wrecv, src in zip(self.perms, wrecvs, self.srcs):
+                recv = lax.ppermute(x, self.axis, perm)
+                w_c = shaped(self.local(wrecv), x)
+                peer = self.local(src)[0]  # this node's partner (self if none)
+                deliv = jnp.take(mask_row, peer)  # diag is always True
+                out = out + jnp.where(deliv, w_c, jnp.zeros_like(w_c)) * recv
+                dropped = dropped + jnp.where(
+                    deliv, jnp.zeros_like(w_c), w_c
+                )
+            return out + dropped * x
+
+        return mix

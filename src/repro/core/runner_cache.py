@@ -146,6 +146,22 @@ def array_fingerprint(a) -> tuple:
     )
 
 
+def fault_fingerprint(
+    has_link: bool, has_straggler: bool, n_slots: int = 0
+) -> tuple:
+    """The fault-structure component of a runner key.
+
+    Only the STRUCTURE of the injected faults enters the key — which
+    families are active and how many straggler buffer slots the step
+    threads through its carry. The per-step masks are runtime scan
+    inputs, so one compiled fault runner serves every drop rate / seed,
+    exactly like hyperparameter values. A fault-free runner has no
+    ``("faults", ...)`` component at all, so it can never collide with a
+    faulty one.
+    """
+    return ("faults", bool(has_link), bool(has_straggler), int(n_slots))
+
+
 def mesh_fingerprint(mesh) -> tuple:
     """Content key for a device mesh: axis names/sizes + device ids.
 

@@ -44,7 +44,13 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import reference, runner_cache
-from repro.core.comm import DenseComm, ShardedComm, shard_map as _shard_map
+from repro.core.comm import (
+    DenseComm,
+    FaultyDenseComm,
+    FaultyShardedComm,
+    ShardedComm,
+    shard_map as _shard_map,
+)
 from repro.core.dsba import (
     DSBAConfig,
     draw_indices,
@@ -238,68 +244,30 @@ def make_problem(
 
 
 # ---------------------------------------------------------------------------
-# Node churn: fault plans (kill/join events) applied mid-run by solve()
+# Fault plans (churn / link faults / stragglers) applied mid-run by solve().
+# The schemas live in ``repro.ft.faults`` (plain-numpy, import-light);
+# ChurnEvent/ChurnPlan are re-exported here for the PR 8 call sites.
 # ---------------------------------------------------------------------------
 
-
-@dataclasses.dataclass(frozen=True, eq=False)
-class ChurnEvent:
-    """One membership change at iteration ``at`` (after ``at`` steps ran).
-
-    kind="kill": ``nodes`` (in the membership numbering CURRENT at ``at``)
-    leave; survivors keep going on ``graph`` (default: the induced
-    subgraph, which must be connected) with mixing ``w`` (default: the
-    paper's Laplacian weights). kind="join": ``n_new`` nodes join,
-    seeded — state rows AND data shard — from node ``seed_from``
-    (matching ``ElasticGossip.grow``); ``graph`` over the grown
-    membership is required (the old graph says nothing about the
-    newcomers' wiring).
-    """
-
-    at: int
-    kind: str  # "kill" | "join"
-    nodes: tuple[int, ...] = ()
-    n_new: int = 0
-    seed_from: int = 0
-    graph: Graph | None = None
-    w: np.ndarray | None = None
-
-    def __post_init__(self):
-        """Validate the event's own fields (graph-vs-membership at use)."""
-        if self.kind not in ("kill", "join"):
-            raise ValueError(f"churn event kind {self.kind!r} is not kill|join")
-        object.__setattr__(self, "nodes", tuple(int(x) for x in self.nodes))
-        if self.kind == "kill" and not self.nodes:
-            raise ValueError("kill event needs at least one node")
-        if self.kind == "join":
-            if self.n_new < 1:
-                raise ValueError("join event needs n_new >= 1")
-            if self.graph is None:
-                raise ValueError(
-                    "join event requires a graph over the grown membership"
-                )
-
-
-@dataclasses.dataclass(frozen=True, eq=False)
-class ChurnPlan:
-    """An ordered fault-injection plan: strictly increasing event times.
-
-    Passed to ``solve()`` as ``comm_options={"fault_plan": plan}`` (dense
-    and sharded backends; methods advertising ``supports_churn``). Tests
-    use it to kill/join nodes deterministically and assert re-convergence
-    on the survivor system.
-    """
-
-    events: tuple[ChurnEvent, ...]
-
-    def __post_init__(self):
-        """Normalize to a tuple and check event times are increasing."""
-        object.__setattr__(self, "events", tuple(self.events))
-        ats = [e.at for e in self.events]
-        if any(b <= a for a, b in zip(ats, ats[1:])):
-            raise ValueError(f"churn event times must strictly increase: {ats}")
-        if not self.events:
-            raise ValueError("ChurnPlan needs at least one event")
+from repro.ft.faults import (  # noqa: E402  (grouped with the fault layer)
+    ChurnEvent,
+    ChurnPlan,
+    FaultPlan,
+    LinkFault,
+    StragglerSpec,
+    as_fault_plan,
+    delivered_in_messages,
+    fault_message_totals,
+    link_delivered_mask,
+    source_sent_mask,
+    straggler_delivered_mask,
+)
+from repro.ckpt.checkpoint import (  # noqa: E402
+    CheckpointManager,
+    CheckpointSpec,
+    load_checkpoint,
+    restore_checkpoint,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -382,6 +350,18 @@ class SolverSpec:
       (1^T W = 1^T for any doubly stochastic W) and does NOT reanchor.
     - ``supports_per_node_lam``: the step accepts ``lam`` as an (N,)
       array (personalized regularization) — dense backend only.
+    - ``supports_link_faults``: the step routes ALL neighbor exchange
+      through ``comm.matvec``, so a per-step delivery mask (masked mixing
+      rows with row-renormalization) injects cleanly. True for every
+      registered method — the flag exists so a future method with
+      out-of-band exchange degrades to a typed error.
+    - ``supports_stragglers``: the step's matvec call sites are each
+      invoked a FIXED number of times per iteration at the top level of
+      the traced step, so last-delivered-value buffers can be threaded
+      through the scan carry. False for methods that apply ``matvec``
+      inside an inner traced loop (mudag's FastMix — the buffer write
+      would escape the loop trace) or gate it on a traced round predicate
+      (sliding — off-round iterations exchange nothing to delay).
     """
 
     name: str
@@ -400,6 +380,8 @@ class SolverSpec:
     supports_churn: bool = False
     supports_per_node_lam: bool = False
     reanchor: Callable[[Any], Any] | None = None
+    supports_link_faults: bool = True
+    supports_stragglers: bool = True
 
     def supports_sparse_comm(self) -> bool:
         """Whether this method has a sparse-communication backend."""
@@ -414,6 +396,8 @@ class SolverSpec:
             supports_schedule=self.supports_schedule,
             supports_churn=self.supports_churn,
             supports_per_node_lam=self.supports_per_node_lam,
+            supports_link_faults=self.supports_link_faults,
+            supports_stragglers=self.supports_stragglers,
         )
 
 
@@ -437,6 +421,8 @@ class SolverCapabilities:
     supports_schedule: bool = False
     supports_churn: bool = False
     supports_per_node_lam: bool = False
+    supports_link_faults: bool = True
+    supports_stragglers: bool = True
 
     def comm_backends(self) -> tuple[str, ...]:
         """The comm backends this solver accepts (dense is universal)."""
@@ -478,13 +464,16 @@ def _check_capability(
     schedule: bool = False,
     churn: bool = False,
     per_node_lam: bool = False,
+    link_faults: bool = False,
+    stragglers: bool = False,
 ) -> None:
     """Raise ``CapabilityError`` unless (spec, comm, family) is supported.
 
-    The keyword flags add the dynamic-network axes: a multi-segment graph
-    ``schedule``, a ``churn`` fault plan, or a ``per_node_lam`` array.
-    Runs before any solver factory, so an unsupported combination can
-    never silently fall back to a static run.
+    The keyword flags add the dynamic-network and fault-injection axes: a
+    multi-segment graph ``schedule``, a ``churn`` plan, a ``per_node_lam``
+    array, ``link_faults`` (per-edge drops) and ``stragglers`` (delayed
+    delivery). Runs before any solver factory, so an unsupported
+    combination can never silently fall back to a static run.
     """
     caps = spec.capabilities()
     if family not in caps.problem_families:
@@ -515,11 +504,24 @@ def _check_capability(
             f"method {spec.name!r} does not support node churn "
             "(fault_plan): its state cannot be elastically remapped",
         )
-    if churn and comm == "sparse":
+    if link_faults and not caps.supports_link_faults:
         raise CapabilityError(
             spec.name, comm, family,
-            "node churn is unavailable under comm='sparse': the delta "
-            "relay's protocol tables are derived for the whole graph",
+            f"method {spec.name!r} does not support link faults: its "
+            "neighbor exchange does not route through comm.matvec",
+        )
+    if stragglers and not caps.supports_stragglers:
+        raise CapabilityError(
+            spec.name, comm, family,
+            f"method {spec.name!r} does not support stragglers: its "
+            "matvec call sites are not fixed-count per iteration "
+            "(inner gossip loop or traced round gating)",
+        )
+    if stragglers and comm != "dense":
+        raise CapabilityError(
+            spec.name, comm, family,
+            "stragglers (delayed delivery buffers) run on comm='dense' "
+            "only; link faults cover the sharded and sparse backends",
         )
     if per_node_lam and not caps.supports_per_node_lam:
         raise CapabilityError(
@@ -537,7 +539,7 @@ def _check_capability(
 #: per-backend comm_options schema enforced by ``_validate_options``
 _COMM_OPTION_KEYS = {
     "dense": ("fault_plan",),
-    "sparse": ("engine", "verify", "use_pallas"),
+    "sparse": ("engine", "verify", "use_pallas", "fault_plan"),
     "sharded": ("mesh", "fault_plan"),
 }
 
@@ -847,6 +849,201 @@ def _get_sharded_runner(
             )
         )
         return _ShardedRunner(
+            init=lambda z0: spec.init(problem, fhp, z0),
+            chunk=chunk,
+            z_read=z_read,
+            mesh=mesh,
+        )
+
+    return runner_cache.SHARDED.get_or_build(key, (*guards, mesh), build)
+
+
+@dataclasses.dataclass
+class _DenseFaultRunner:
+    """One compiled fault-injecting dense runner.
+
+    The per-iteration delivery masks ride as scan inputs (like the
+    hyperparameter values ride as traced arguments), so ONE compiled
+    runner serves every drop rate, seed, and staleness bound of the same
+    fault STRUCTURE — only which families are active enters the cache
+    key (``runner_cache.fault_fingerprint``). Straggler last-delivered
+    buffers thread through the scan carry next to the solver state.
+    """
+
+    init: Callable  # (z0) -> (state, bufs), eager
+    chunk: Callable  # jitted (state, bufs, idx, mask, deliv, hp)
+    z_read: Callable  # jitted (state, hp) -> (N, D)
+    n_slots: int  # straggler buffer slots per iteration
+    make_bufs: Callable = None  # () -> fresh zero buffers (phase entry)
+
+
+def _get_dense_fault_runner(
+    spec: SolverSpec, problem: Problem, hp: Mapping,
+    *, has_link: bool, has_straggler: bool,
+):
+    """Fetch (or compile) the fault-injecting dense runner."""
+    base_key, guards = _runner_key(spec, problem, hp)
+    key = base_key + (
+        runner_cache.fault_fingerprint(has_link, has_straggler),
+    )
+
+    def build() -> _DenseFaultRunner:
+        comm = FaultyDenseComm(problem.graph, has_link, has_straggler)
+        fhp = _FactoryHP(hp, spec.static_hp)
+        step_fn = spec.step(problem, fhp, comm)
+        z_fn = spec.z_of(problem, fhp, comm)
+        n, D = problem.graph.n, problem.dim
+        dt = problem.data.val.dtype
+
+        # abstract probe: discover the straggler buffer slot shapes (one
+        # per matvec invocation in the step) before assembling the carry
+        comm.begin_probe()
+        hp_probe = _dynamic_hp(spec, problem, hp)
+        state_proto = jax.eval_shape(
+            lambda z: spec.init(problem, fhp, z),
+            jax.ShapeDtypeStruct((n, D), dt),
+        )
+        jax.eval_shape(
+            lambda s, i: step_fn(s, i, hp_probe),
+            state_proto,
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        )
+        slots = comm.end_probe()
+
+        def make_bufs():
+            # buffers start at the t=0 "last delivered" convention: the
+            # delivery masks force a fresh send on each node's first
+            # iteration, so these zeros are never read
+            return tuple(jnp.zeros(s.shape, s.dtype) for s in slots)
+
+        def init(z0):
+            return spec.init(problem, fhp, z0), make_bufs()
+
+        def run_chunk(state, bufs, idx_block, mask_block, deliv_block,
+                      hp_dyn):
+            runner_cache.DENSE.note_trace()  # trace-time only
+
+            def body(carry, xs):
+                st, bf = carry
+                i_t, mask_t, deliv_t = xs
+                comm.begin_step(mask_t, deliv_t, bf)
+                st2 = step_fn(st, i_t, hp_dyn)
+                return (st2, comm.end_step()), None
+
+            (st, bf), _ = jax.lax.scan(
+                body, (state, bufs), (idx_block, mask_block, deliv_block)
+            )
+            return st, bf
+
+        def read(state, hp_dyn):
+            runner_cache.DENSE.note_trace()
+            return z_fn(state, hp_dyn)
+
+        return _DenseFaultRunner(
+            init=init,
+            chunk=jax.jit(run_chunk),
+            z_read=jax.jit(read),
+            n_slots=len(slots),
+            make_bufs=make_bufs,
+        )
+
+    return runner_cache.DENSE.get_or_build(key, guards, build)
+
+
+@dataclasses.dataclass
+class _ShardedFaultRunner:
+    """Sharded runner with a per-iteration link-delivery mask scan input.
+
+    Every edge-color ``ppermute`` still executes physically (dropping at
+    the receiver), so the HLO-measured collective traffic is identical to
+    the fault-free program; only the modeled ``doubles_received`` counts
+    delivered messages (see ``comm.FaultyShardedComm``).
+    """
+
+    init: Callable
+    chunk: Callable  # jitted shard_map'd (state, idx, mask, hp) -> state
+    z_read: Callable
+    mesh: Any
+    measured: dict = dataclasses.field(default_factory=dict)
+
+    def collective_costs(self, state, idx_block, mask_block, hp_dyn) -> dict:
+        """Per-iteration collective bytes/counts (same as fault-free)."""
+        from repro.launch.hlo_analysis import compiled_collective_costs
+
+        length = int(idx_block.shape[0])
+        if length not in self.measured:
+            compiled = self.chunk.lower(
+                state, idx_block, mask_block, hp_dyn
+            ).compile()
+            self.measured[length] = compiled_collective_costs(
+                compiled, iterations=length
+            )
+        return self.measured[length]
+
+
+def _get_sharded_fault_runner(
+    spec: SolverSpec, problem: Problem, hp: Mapping, mesh
+):
+    """Fetch (or compile) the link-fault shard_map runner."""
+    base_key, guards = _runner_key(spec, problem, hp)
+    key = base_key + (
+        runner_cache.mesh_fingerprint(mesh),
+        runner_cache.fault_fingerprint(True, False),
+    )
+
+    def build() -> _ShardedFaultRunner:
+        comm = FaultyShardedComm(problem.graph, mesh)
+        fhp = _FactoryHP(hp, spec.static_hp)
+        step_fn = spec.step(problem, fhp, comm)
+        z_fn = spec.z_of(problem, fhp, comm)
+        n, D = problem.graph.n, problem.dim
+        dt = problem.data.val.dtype
+
+        state_proto = jax.eval_shape(
+            lambda z: spec.init(problem, fhp, z),
+            jax.ShapeDtypeStruct((n, D), dt),
+        )
+        state_specs = _node_partition_specs(state_proto, n)
+        hp_specs = {k: P() for k in _dynamic_hp(spec, problem, hp)}
+
+        def run_chunk(state, idx_block, mask_block, hp_dyn):
+            runner_cache.SHARDED.note_trace()  # trace-time only
+
+            def body(st, xs):
+                i_t, mask_t = xs
+                comm.begin_step(mask_t)
+                st2 = step_fn(st, i_t, hp_dyn)
+                comm.end_step()
+                return st2, None
+
+            st, _ = jax.lax.scan(body, state, (idx_block, mask_block))
+            return st
+
+        def read(state, hp_dyn):
+            runner_cache.SHARDED.note_trace()
+            return z_fn(state, hp_dyn)
+
+        # the mask is replicated: each device reads its own row inside
+        # the matvec via comm.local (see FaultyShardedComm)
+        chunk = jax.jit(
+            _shard_map(
+                run_chunk, mesh=mesh,
+                in_specs=(
+                    state_specs, P(None, "node"), P(None, None, None),
+                    hp_specs,
+                ),
+                out_specs=state_specs,
+                check_rep=False,
+            )
+        )
+        z_read = jax.jit(
+            _shard_map(
+                read, mesh=mesh,
+                in_specs=(state_specs, hp_specs),
+                out_specs=P("node", None),
+            )
+        )
+        return _ShardedFaultRunner(
             init=lambda z0: spec.init(problem, fhp, z0),
             chunk=chunk,
             z_read=z_read,
@@ -1256,6 +1453,79 @@ def _rounds_at(spec: SolverSpec, hp: Mapping, t: int):
 
 
 # ---------------------------------------------------------------------------
+# Fault-mask resolution and delivered-only accounting
+# ---------------------------------------------------------------------------
+
+
+def _static_fault_masks(plan, graph, steps: int, start: int = 0):
+    """Resolve a plan's link/straggler masks for one static phase.
+
+    Returns ``(link_mask, strag_mask)`` with all-delivered masks
+    collapsed to ``None`` — the caller routes a mask-free run through
+    the PLAIN compiled runner, which makes a p=0 plan bit-equal to a
+    plan-free run by construction (no masked arithmetic at all).
+    """
+    link_mask = strag_mask = None
+    if plan is not None and plan.link is not None:
+        m = link_delivered_mask(plan.link, graph, steps, start=start)
+        if not bool(m.all()):
+            link_mask = m
+    if plan is not None and plan.straggler is not None:
+        m = straggler_delivered_mask(
+            plan.straggler, graph.n, steps, start=start
+        )
+        if not bool(m.all()):
+            strag_mask = m
+    return link_mask, strag_mask
+
+
+def _fault_accounting(spec, hp, problem, link_mask, strag_mask, steps, iters):
+    """Delivered-only doubles (R, N) plus the extras["faults"] record.
+
+    The closed-form model charges one (D,)-double message per DELIVERED
+    directed edge per exchange round: per-iteration delivered in-message
+    counts from the masks, scaled by the method's rounds-per-iteration
+    hook. With all-True masks this reduces exactly to the standard
+    ``rounds * degree * D`` dense model.
+    """
+    D = problem.dim
+    rr = _cumulative_rounds(spec, hp, np.arange(steps + 1))
+    rdiff = np.diff(rr)  # rounds run during iteration t
+    d_in = delivered_in_messages(problem.graph, link_mask, strag_mask, steps)
+    per_step = rdiff[:, None] * d_in * D  # (steps, N)
+    cumsum = np.cumsum(per_step, axis=0)
+    doubles = cumsum[np.asarray(iters) - 1]  # (R, N)
+    deg = np.asarray(problem.graph.degrees, dtype=np.int64)
+    injected = int(rr[steps] * deg.sum())
+    delivered = int((rdiff * d_in.sum(axis=1)).sum())
+    extras = {
+        "injected_messages": injected,
+        "delivered_messages": delivered,
+        "drop_rate": (
+            0.0 if injected == 0 else 1.0 - delivered / injected
+        ),
+    }
+    return doubles, extras
+
+
+def _ckpt_meta(method: str, comm: str, record_every: int, rec) -> dict:
+    """The JSON metadata committed with each ``solve()`` checkpoint.
+
+    The recorder's scalars ride in the manifest (Python floats round-trip
+    bit-exactly through ``repr`` in JSON), so resume can rebuild the
+    record history without shape-templating run-length-dependent arrays.
+    """
+    return {
+        "method": method,
+        "comm": comm,
+        "record_every": int(record_every),
+        "rec_iters": [int(x) for x in rec.iters],
+        "rec_dist2": [float(x) for x in rec.dist2],
+        "rec_consensus": [float(x) for x in rec.consensus],
+    }
+
+
+# ---------------------------------------------------------------------------
 # solve(): the single entrypoint
 # ---------------------------------------------------------------------------
 
@@ -1272,6 +1542,8 @@ def solve(
     indices: np.ndarray | None = None,
     keep_snapshots: bool = False,
     comm_options: dict | None = None,
+    checkpoint: CheckpointSpec | None = None,
+    resume: str | None = None,
     **hyperparams,
 ) -> SolveResult:
     """Run ``method`` on ``problem`` over ``comm`` and return a SolveResult.
@@ -1298,9 +1570,19 @@ def solve(
     comm_options: backend passthrough for ``comm="sparse"`` (``engine``,
         ``verify``, ``use_pallas``) and ``comm="sharded"`` (``mesh``, a
         prebuilt ``"node"``-axis mesh; defaults to
-        ``launch.mesh.make_node_mesh(N)``). ``comm="dense"``/``"sharded"``
-        additionally accept ``fault_plan`` (a ``ChurnPlan``): node churn
-        applied mid-run, for methods advertising ``supports_churn``.
+        ``launch.mesh.make_node_mesh(N)``). Every backend additionally
+        accepts ``fault_plan`` — a ``repro.ft.FaultPlan`` (or a bare
+        ``ChurnEvent``/``ChurnPlan``) composing node churn, link faults,
+        and stragglers; families gate on the solver's capability record
+        (``supports_churn`` / ``supports_link_faults`` /
+        ``supports_stragglers`` — stragglers are dense-only), and
+        ``extras["faults"]`` reports injected-vs-delivered counts with
+        the doubles accounting charging delivered traffic only.
+    checkpoint: a ``repro.ckpt.CheckpointSpec`` — snapshot solver state +
+        recorder at record boundaries every ``checkpoint.every``
+        iterations (dense and sparse backends).
+    resume: a checkpoint directory — restore the newest committed
+        snapshot and continue BIT-EQUAL to an uninterrupted run.
     **hyperparams: solver hyperparameter overrides; the valid keys are the
         solver's ``defaults`` keys (anything else raises ``TypeError``).
     """
@@ -1308,10 +1590,13 @@ def solve(
     if comm not in COMM_BACKENDS:
         raise ValueError(f"unknown comm backend {comm!r}; one of {COMM_BACKENDS}")
     # peek fault_plan before schema validation so an unsupported (method,
-    # comm) x churn combination surfaces as the typed CapabilityError
-    fault_plan = (comm_options or {}).get("fault_plan")
+    # comm) x fault-family combination surfaces as the typed CapabilityError
+    plan = as_fault_plan((comm_options or {}).get("fault_plan"))
+    churn_plan = plan.churn if plan is not None else None
+    want_link = plan is not None and plan.link is not None
+    want_strag = plan is not None and plan.straggler is not None
     multi = problem.schedule is not None and len(problem.schedule) > 1
-    if problem.schedule is not None and fault_plan is not None:
+    if problem.schedule is not None and plan is not None:
         raise ValueError(
             "a graph schedule and a fault_plan cannot be combined in one "
             "run; encode the W changes as schedule segments instead"
@@ -1319,20 +1604,73 @@ def solve(
     _check_capability(
         spec, comm, problem.spec.kind,
         schedule=multi,
-        churn=fault_plan is not None,
+        churn=churn_plan is not None,
         per_node_lam=np.ndim(problem.lam) > 0,
+        link_faults=want_link,
+        stragglers=want_strag,
     )
     opts = _validate_options(comm, comm_options)
     opts.pop("fault_plan", None)
-    if fault_plan is not None and keep_snapshots:
+    if churn_plan is not None and keep_snapshots:
         raise ValueError(
             "keep_snapshots is unavailable with a fault_plan: snapshot "
             "shapes change across churn events"
         )
+    if churn_plan is not None:
+        # node ids are relabeled across membership segments, so explicit
+        # node/edge targets in the other families become ambiguous
+        if want_link and plan.link.edges is not None:
+            raise ValueError(
+                "scheduled link faults (edges=) cannot be combined with "
+                "node churn: node ids are relabeled across membership "
+                "changes; use a probabilistic LinkFault(p=...)"
+            )
+        if want_strag and plan.straggler.nodes is not None:
+            raise ValueError(
+                "a straggler node subset (nodes=) cannot be combined with "
+                "node churn: node ids are relabeled across membership "
+                "changes; use a global StragglerSpec(p=...)"
+            )
     if steps < 1:
         raise ValueError("steps must be >= 1")
     if record_every < 1:
         raise ValueError("record_every must be >= 1")
+    if checkpoint is not None and not isinstance(checkpoint, CheckpointSpec):
+        raise TypeError(
+            f"checkpoint must be a CheckpointSpec, got "
+            f"{type(checkpoint).__name__}"
+        )
+    if checkpoint is not None or resume is not None:
+        if comm == "sharded":
+            raise ValueError(
+                "checkpoint/resume supports comm='dense' and comm='sparse'; "
+                "the sharded backend is not checkpointable"
+            )
+        if problem.schedule is not None:
+            raise ValueError(
+                "checkpoint/resume cannot be combined with a graph schedule "
+                "(phase boundaries are not checkpoint boundaries)"
+            )
+        if plan is not None:
+            raise ValueError(
+                "checkpoint/resume cannot be combined with a fault_plan: "
+                "fault masks and straggler buffers are not part of the "
+                "snapshot schema"
+            )
+        if keep_snapshots:
+            raise ValueError(
+                "checkpoint/resume does not support keep_snapshots"
+            )
+    if (
+        checkpoint is not None
+        and comm == "dense"
+        and checkpoint.every % record_every != 0
+    ):
+        raise ValueError(
+            f"checkpoint.every={checkpoint.every} must be a multiple of "
+            f"record_every={record_every} on the dense backend (snapshots "
+            "happen at record boundaries)"
+        )
 
     hp = dict(spec.defaults)
     unknown = set(hyperparams) - set(hp)
@@ -1361,8 +1699,8 @@ def solve(
     # static path below (bit-for-bit — only extras gains the segment log)
     phases = None
     sched_x = None
-    if problem.schedule is not None or fault_plan is not None:
-        phases = _resolve_phases(problem, steps, fault_plan)
+    if problem.schedule is not None or churn_plan is not None:
+        phases = _resolve_phases(problem, steps, churn_plan)
         sched_x = _schedule_extras(phases)
         if len(phases) == 1:
             problem = phases[0].problem
@@ -1373,10 +1711,58 @@ def solve(
 
     if comm == "sparse":
         if phases is not None:
+            if any(ph.entry in ("kill", "join") for ph in phases):
+                return _solve_sparse_churn(
+                    spec, method, phases, hp, steps, pts, rec, indices,
+                    z0, opts, sched_x, plan,
+                )
             return _solve_sparse_schedule(
                 spec, method, phases, hp, steps, pts, rec, indices, z0,
                 opts, sched_x,
             )
+        fault_x = None
+        if want_link:
+            sent = source_sent_mask(plan.link, problem.graph, steps)
+            n_bcast = steps * problem.graph.n
+            fault_x = {
+                "injected_broadcasts": int(n_bcast),
+                "delivered_broadcasts": int(sent.sum()),
+                "drop_rate": 1.0 - float(sent.sum()) / n_bcast,
+            }
+            if not bool(sent.all()):
+                # all-delivered plans route through the plain (byte-
+                # identical) relay program — p=0 is bit-equal by routing
+                opts["sent_mask"] = sent
+        mgr = None
+        if checkpoint is not None:
+            mgr = CheckpointManager(
+                checkpoint.directory, keep_last=checkpoint.keep_last
+            )
+            meta = {"method": method, "comm": comm}
+            opts["ckpt_every"] = int(checkpoint.every)
+            opts["ckpt_save"] = (
+                lambda t_done, tree: mgr.save(
+                    t_done, tree, metadata=meta, async_=False
+                )
+            )
+        if resume is not None:
+            step_r, meta_r, leaves = load_checkpoint(resume)
+            if step_r is None:
+                raise ValueError(
+                    f"no committed checkpoint to resume in {resume!r}"
+                )
+            for key, val in (("method", method), ("comm", comm)):
+                if meta_r.get(key) != val:
+                    raise ValueError(
+                        f"checkpoint {key}={meta_r.get(key)!r} does not "
+                        f"match the resuming run's {key}={val!r}"
+                    )
+            if step_r > steps:
+                raise ValueError(
+                    f"checkpoint at step {step_r} is beyond steps={steps}; "
+                    "resume with steps >= the checkpointed iteration"
+                )
+            opts["resume"] = (int(step_r), leaves)
         t0 = time.perf_counter()
         sres = spec.sparse_run(problem, hp, steps, indices, z0, opts)
         wall = time.perf_counter() - t0
@@ -1388,6 +1774,8 @@ def solve(
             "z_trace": sres.z_trace,
             "recon_max_err": sres.recon_max_err,
         }
+        if fault_x is not None:
+            extras["faults"] = fault_x
         if sched_x is not None:
             extras["schedule"] = sched_x
         return SolveResult(
@@ -1408,7 +1796,7 @@ def solve(
     if phases is not None:
         return _solve_phased(
             spec, method, comm, phases, hp, steps, pts, rec, indices, z0,
-            opts, sched_x,
+            opts, sched_x, plan,
         )
 
     if comm == "sharded":
@@ -1419,27 +1807,60 @@ def solve(
             from repro.launch.mesh import make_node_mesh
 
             mesh = make_node_mesh(n)
-        runner = _get_sharded_runner(spec, problem, hp, mesh)
         hp_dyn = _dynamic_hp(spec, problem, hp)
         idx_j = jnp.asarray(indices[:steps], jnp.int32)
-        state = runner.init(jnp.asarray(z0))
-        costs = runner.collective_costs(state, idx_j[: pts[0]], hp_dyn)
-        prev = 0
-        z_final = None
-        for pt in pts:
-            state = runner.chunk(state, idx_j[prev:pt], hp_dyn)
-            prev = pt
-            z_final = runner.z_read(state, hp_dyn)
-            rec.push(pt, z_final)
-        wall = time.perf_counter() - t0
-        iters, dist2, cons, zs = rec.arrays()
-        per_node = dense_doubles_per_iter(problem.graph, D)  # (N,)
-        rounds = _cumulative_rounds(spec, hp, iters)
-        doubles = rounds[:, None] * per_node[None, :]
+        link_mask, _ = _static_fault_masks(plan, problem.graph, steps)
+        fault_x = None
+        if link_mask is not None:
+            # link-fault runner: every edge-color ppermute still executes
+            # (measured bytes are identical); receivers drop masked edges
+            # and redirect the lost mixing mass to their own iterate
+            frunner = _get_sharded_fault_runner(spec, problem, hp, mesh)
+            lm = jnp.asarray(link_mask)
+            state = frunner.init(jnp.asarray(z0))
+            costs = frunner.collective_costs(
+                state, idx_j[: pts[0]], lm[: pts[0]], hp_dyn
+            )
+            prev = 0
+            z_final = None
+            for pt in pts:
+                state = frunner.chunk(
+                    state, idx_j[prev:pt], lm[prev:pt], hp_dyn
+                )
+                prev = pt
+                z_final = frunner.z_read(state, hp_dyn)
+                rec.push(pt, z_final)
+            wall = time.perf_counter() - t0
+            iters, dist2, cons, zs = rec.arrays()
+            doubles, fault_x = _fault_accounting(
+                spec, hp, problem, link_mask, None, steps, iters
+            )
+        else:
+            runner = _get_sharded_runner(spec, problem, hp, mesh)
+            state = runner.init(jnp.asarray(z0))
+            costs = runner.collective_costs(state, idx_j[: pts[0]], hp_dyn)
+            prev = 0
+            z_final = None
+            for pt in pts:
+                state = runner.chunk(state, idx_j[prev:pt], hp_dyn)
+                prev = pt
+                z_final = runner.z_read(state, hp_dyn)
+                rec.push(pt, z_final)
+            wall = time.perf_counter() - t0
+            iters, dist2, cons, zs = rec.arrays()
+            per_node = dense_doubles_per_iter(problem.graph, D)  # (N,)
+            rounds = _cumulative_rounds(spec, hp, iters)
+            doubles = rounds[:, None] * per_node[None, :]
+            if plan is not None and want_link:
+                _, fault_x = _fault_accounting(
+                    spec, hp, problem, None, None, steps, iters
+                )
         extras = {
             "collectives": costs,
             "mesh_devices": int(mesh.shape["node"]),
         }
+        if fault_x is not None:
+            extras["faults"] = fault_x
         if sched_x is not None:
             extras["schedule"] = sched_x
         return SolveResult(
@@ -1464,31 +1885,118 @@ def solve(
 
     # ---- dense backend: cached compiled runner, hp as traced arguments ----
     t0 = time.perf_counter()
-    runner = _get_dense_runner(spec, problem, hp)
     hp_dyn = _dynamic_hp(spec, problem, hp)
     idx_j = jnp.asarray(indices[:steps], jnp.int32)
+    link_mask, strag_mask = _static_fault_masks(plan, problem.graph, steps)
 
-    state = runner.init(jnp.asarray(z0))
-    if runner.donates:
-        # init factories may alias leaves (dsba's z/z_prev are the same
-        # array at t=0); donation rejects duplicate buffers, so de-alias
-        # the initial carry once — later carries are distinct scan outputs
-        state = jax.tree_util.tree_map(
-            lambda x: jnp.array(x, copy=True), state
+    if link_mask is not None or strag_mask is not None:
+        # fault-injecting runner: the per-iteration masks ride as scan
+        # inputs; one compiled program per active-family STRUCTURE
+        frunner = _get_dense_fault_runner(
+            spec, problem, hp,
+            has_link=link_mask is not None,
+            has_straggler=strag_mask is not None,
         )
-    prev = 0
+        lm = (
+            jnp.asarray(link_mask)
+            if link_mask is not None
+            else jnp.ones((steps, 1, 1), bool)  # inert placeholder xs
+        )
+        sm = (
+            jnp.asarray(strag_mask)
+            if strag_mask is not None
+            else jnp.ones((steps, 1), bool)
+        )
+        state, bufs = frunner.init(jnp.asarray(z0))
+        prev = 0
+        z_final = None
+        for pt in pts:
+            state, bufs = frunner.chunk(
+                state, bufs, idx_j[prev:pt], lm[prev:pt], sm[prev:pt],
+                hp_dyn,
+            )
+            prev = pt
+            z_final = frunner.z_read(state, hp_dyn)
+            rec.push(pt, z_final)
+        wall = time.perf_counter() - t0
+        iters, dist2, cons, zs = rec.arrays()
+        doubles, fault_x = _fault_accounting(
+            spec, hp, problem, link_mask, strag_mask, steps, iters
+        )
+        extras = {"faults": fault_x}
+        if sched_x is not None:
+            extras["schedule"] = sched_x
+        return SolveResult(
+            method=method,
+            comm=comm,
+            iters=iters,
+            dist2=dist2,
+            consensus=cons,
+            doubles_received=doubles,
+            ints_received=np.zeros_like(doubles),
+            wall_time=wall,
+            z=np.asarray(z_final),
+            state=state,
+            zs=zs,
+            extras=extras,
+        )
+
+    runner = _get_dense_runner(spec, problem, hp)
+    mgr = None
+    if checkpoint is not None:
+        mgr = CheckpointManager(
+            checkpoint.directory, keep_last=checkpoint.keep_last
+        )
+    start = 0
+    state = None
+    if resume is not None:
+        state, start = _restore_dense(
+            resume, runner, rec, method=method, comm=comm,
+            record_every=record_every, steps=steps, z0=z0,
+        )
+    if state is None:
+        state = runner.init(jnp.asarray(z0))
+        if runner.donates:
+            # init factories may alias leaves (dsba's z/z_prev are the same
+            # array at t=0); donation rejects duplicate buffers, so de-alias
+            # the initial carry once — later carries are distinct scan
+            # outputs
+            state = jax.tree_util.tree_map(
+                lambda x: jnp.array(x, copy=True), state
+            )
+    prev = start
     z_final = None
     for pt in pts:
+        if pt <= start:
+            continue  # already covered by the restored checkpoint
         state = runner.chunk(state, idx_j[prev:pt], hp_dyn)
         prev = pt
         z_final = runner.z_read(state, hp_dyn)
         rec.push(pt, z_final)
+        if mgr is not None and pt % checkpoint.every == 0:
+            mgr.save(
+                pt, {"state": state},
+                metadata=_ckpt_meta(method, comm, record_every, rec),
+            )
+    if mgr is not None:
+        mgr.wait()
+    if z_final is None:
+        # resumed at (or past) the final record point: nothing to re-run
+        z_final = runner.z_read(state, hp_dyn)
     wall = time.perf_counter() - t0
 
     iters, dist2, cons, zs = rec.arrays()
     per_node = dense_doubles_per_iter(problem.graph, D)  # (N,)
     rounds = _cumulative_rounds(spec, hp, iters)
     doubles = rounds[:, None] * per_node[None, :]
+    extras = {} if sched_x is None else {"schedule": sched_x}
+    if plan is not None and (want_link or want_strag):
+        # p=0 plan: masks collapsed to the plain runner (bit-equal by
+        # routing), but the delivered-vs-injected record is still reported
+        _, fault_x = _fault_accounting(
+            spec, hp, problem, None, None, steps, iters
+        )
+        extras["faults"] = fault_x
     return SolveResult(
         method=method,
         comm=comm,
@@ -1501,13 +2009,45 @@ def solve(
         z=np.asarray(z_final),
         state=state,
         zs=zs,
-        extras={} if sched_x is None else {"schedule": sched_x},
+        extras=extras,
     )
+
+
+def _restore_dense(resume, runner, rec, *, method, comm, record_every,
+                   steps, z0):
+    """Restore a dense ``solve()`` from the newest committed checkpoint.
+
+    Returns ``(state, start)``. The recorder history rides in the
+    manifest metadata as Python floats (bit-exact JSON round-trip); the
+    solver state restores strictly against a template built by the
+    runner's own init (shapes are run-length independent).
+    """
+    step_r, meta, _ = load_checkpoint(resume)
+    if step_r is None:
+        raise ValueError(f"no committed checkpoint to resume in {resume!r}")
+    for key, val in (("method", method), ("comm", comm),
+                     ("record_every", record_every)):
+        if meta.get(key) != val:
+            raise ValueError(
+                f"checkpoint {key}={meta.get(key)!r} does not match the "
+                f"resuming run's {key}={val!r}"
+            )
+    if step_r > steps:
+        raise ValueError(
+            f"checkpoint at step {step_r} is beyond steps={steps}; "
+            "resume with steps >= the checkpointed iteration"
+        )
+    template = runner.init(jnp.asarray(z0))
+    tree, _ = restore_checkpoint(resume, {"state": template}, step=step_r)
+    rec.iters.extend(int(x) for x in meta["rec_iters"])
+    rec.dist2.extend(float(x) for x in meta["rec_dist2"])
+    rec.consensus.extend(float(x) for x in meta["rec_consensus"])
+    return tree["state"], int(step_r)
 
 
 def _solve_phased(
     spec, method, comm, phases, hp, steps, pts, rec, indices, z0, opts,
-    sched_x,
+    sched_x, plan=None,
 ) -> SolveResult:
     """Dense/sharded execution of a multi-phase (dynamic-network) run.
 
@@ -1518,6 +2058,14 @@ def _solve_phased(
     accounting folds per-phase increments into global per-row cumulative
     counts: rows are the N0 original nodes plus one row per joined node
     (``extras["churn_rows"]`` when membership changed).
+
+    ``plan``: an optional ``FaultPlan`` whose link/straggler families
+    compose with the churn phases — each phase resolves its own delivery
+    masks against the phase graph (seeds fold the phase's global start
+    iteration, so the mask stream is one continuous draw), straggler
+    buffers re-zero at membership boundaries (the first post-churn
+    iteration always delivers fresh), and the delivered-only accounting
+    folds into the same per-row cumulative counts.
     """
     t0 = time.perf_counter()
     base = phases[0].problem
@@ -1532,13 +2080,23 @@ def _solve_phased(
     mesh_opt = opts.get("mesh")
     mesh_devices = None
     state = None
+    bufs = None
     z_final = None
     n_prev = base.graph.n
+    injected_tot = delivered_tot = 0
+    want_fault = plan is not None and (
+        plan.link is not None or plan.straggler is not None
+    )
     for ph in phases:
         p = ph.problem
         n_ph = p.graph.n
+        seg = ph.end - ph.start
         if state is not None:
             state = _elastic_remap(state, ph, n_prev, spec)
+        link_mask, strag_mask = _static_fault_masks(
+            plan, p.graph, seg, start=ph.start
+        )
+        faulty = link_mask is not None or strag_mask is not None
         if comm == "sharded":
             if mesh_opt is not None and mesh_opt.shape["node"] == n_ph:
                 mesh = mesh_opt
@@ -1546,20 +2104,54 @@ def _solve_phased(
                 from repro.launch.mesh import make_node_mesh
 
                 mesh = make_node_mesh(n_ph)
-            runner = _get_sharded_runner(spec, p, hp, mesh)
+            if faulty:
+                runner = _get_sharded_fault_runner(spec, p, hp, mesh)
+            else:
+                runner = _get_sharded_runner(spec, p, hp, mesh)
             if mesh_devices is None:
                 mesh_devices = int(mesh.shape["node"])
+        elif faulty:
+            runner = _get_dense_fault_runner(
+                spec, p, hp,
+                has_link=link_mask is not None,
+                has_straggler=strag_mask is not None,
+            )
         else:
             runner = _get_dense_runner(spec, p, hp)
         hp_dyn = _dynamic_hp(spec, p, hp)
         if state is None:
-            state = runner.init(jnp.asarray(z0))
-            if comm == "dense" and runner.donates:
+            if comm == "dense" and faulty:
+                state, bufs = runner.init(jnp.asarray(z0))
+            else:
+                state = runner.init(jnp.asarray(z0))
+            if comm == "dense" and not faulty and runner.donates:
                 state = jax.tree_util.tree_map(
                     lambda x: jnp.array(x, copy=True), state
                 )
-        per_node_ph = dense_doubles_per_iter(p.graph, D)  # (n_ph,)
-        rounds_start = _rounds_at(spec, hp, ph.start)
+        elif comm == "dense" and faulty:
+            # straggler buffers do not survive membership remaps; the
+            # phase's delivery masks force fresh sends at its first
+            # iteration, so re-zeroed buffers are never read
+            bufs = runner.make_bufs()
+        if faulty:
+            lm_ph = (
+                jnp.asarray(link_mask)
+                if link_mask is not None
+                else jnp.ones((seg, 1, 1), bool)
+            )
+            sm_ph = (
+                jnp.asarray(strag_mask)
+                if strag_mask is not None
+                else jnp.ones((seg, 1), bool)
+            )
+        rdiff_ph = np.diff(
+            _cumulative_rounds(spec, hp, np.arange(ph.start, ph.end + 1))
+        )
+        d_in_ph = delivered_in_messages(p.graph, link_mask, strag_mask, seg)
+        cum_ph = np.cumsum(rdiff_ph[:, None] * d_in_ph * D, axis=0)
+        deg_ph = np.asarray(p.graph.degrees, dtype=np.int64)
+        injected_tot += int(rdiff_ph.sum() * deg_ph.sum())
+        delivered_tot += int((rdiff_ph * d_in_ph.sum(axis=1)).sum())
         costs = None
         marks = sorted(
             {pt for pt in pts if ph.start < pt <= ph.end} | {ph.end}
@@ -1570,27 +2162,41 @@ def _solve_phased(
                 indices[prev:mk][:, ph.cols], jnp.int32
             )
             if comm == "sharded" and costs is None:
-                costs = runner.collective_costs(state, idx_blk, hp_dyn)
+                if faulty:
+                    costs = runner.collective_costs(
+                        state, idx_blk, lm_ph[prev - ph.start:mk - ph.start],
+                        hp_dyn,
+                    )
+                else:
+                    costs = runner.collective_costs(state, idx_blk, hp_dyn)
                 if costs0 is None:
                     costs0 = costs
-            state = runner.chunk(state, idx_blk, hp_dyn)
+            if not faulty:
+                state = runner.chunk(state, idx_blk, hp_dyn)
+            elif comm == "sharded":
+                state = runner.chunk(
+                    state, idx_blk,
+                    lm_ph[prev - ph.start:mk - ph.start], hp_dyn,
+                )
+            else:
+                state, bufs = runner.chunk(
+                    state, bufs, idx_blk,
+                    lm_ph[prev - ph.start:mk - ph.start],
+                    sm_ph[prev - ph.start:mk - ph.start], hp_dyn,
+                )
             prev = mk
             if mk in record_set:
                 z_final = runner.z_read(state, hp_dyn)
                 rec.push(mk, z_final, z_star=p.z_star)
                 snap = cum.copy()
-                snap[ph.row_map] += (
-                    _rounds_at(spec, hp, mk) - rounds_start
-                ) * per_node_ph
+                snap[ph.row_map] += cum_ph[mk - ph.start - 1]
                 doubles_rows.append(snap)
                 if comm == "sharded":
                     measured.append(
                         measured_base
                         + (mk - ph.start) * costs["bytes_per_iter"]
                     )
-        cum[ph.row_map] += (
-            _rounds_at(spec, hp, ph.end) - rounds_start
-        ) * per_node_ph
+        cum[ph.row_map] += cum_ph[-1]
         if comm == "sharded":
             measured_base += (ph.end - ph.start) * costs["bytes_per_iter"]
         n_prev = n_ph
@@ -1602,6 +2208,15 @@ def _solve_phased(
         ph.entry in ("kill", "join") for ph in phases
     ):
         extras["churn_rows"] = total_rows
+    if want_fault:
+        extras["faults"] = {
+            "injected_messages": injected_tot,
+            "delivered_messages": delivered_tot,
+            "drop_rate": (
+                0.0 if injected_tot == 0
+                else 1.0 - delivered_tot / injected_tot
+            ),
+        }
     if comm == "sharded":
         extras["collectives"] = costs0
         extras["mesh_devices"] = mesh_devices
@@ -1695,6 +2310,104 @@ def _solve_sparse_schedule(
     )
 
 
+def _solve_sparse_churn(
+    spec, method, phases, hp, steps, pts, rec, indices, z0, opts, sched_x,
+    plan,
+) -> SolveResult:
+    """Sparse-relay execution of node churn: per-membership-segment relays.
+
+    Each membership segment re-derives the relay protocol tables
+    (reconstruction waves, DD delta ring, broadcast trees) for its own
+    graph and chains through ``run_sparse(..., state0=)``. The carried
+    state is elastically remapped at each boundary (``_elastic_remap``
+    shrinks/grows the SAGA tables and applies the solver's ``reanchor``
+    — DSBA resets its step counter to 0, so the segment re-runs the
+    eq. 31 anchored update against the surviving/augmented membership
+    and the restart path floods the remapped z0 once). Accounting folds
+    per-segment delivered counts into global per-row cumulative totals,
+    exactly like the dense churn path (rows = N0 originals + joiners).
+    """
+    t0 = time.perf_counter()
+    base = phases[0].problem
+    total_rows = max(int(ph.row_map.max()) for ph in phases) + 1
+    cum_d = np.zeros(total_rows, dtype=np.int64)
+    cum_i = np.zeros(total_rows, dtype=np.int64)
+    out_d: list[np.ndarray] = []
+    out_i: list[np.ndarray] = []
+    recon = []
+    injected_tot = delivered_tot = 0
+    want_link = plan is not None and plan.link is not None
+    st = None
+    z_final = None
+    for k, ph in enumerate(phases):
+        p = ph.problem
+        seg = ph.end - ph.start
+        o = dict(opts)
+        if want_link:
+            sent = source_sent_mask(plan.link, p.graph, seg, start=ph.start)
+            injected_tot += seg * p.graph.n
+            delivered_tot += int(sent.sum())
+            if not bool(sent.all()):
+                o["sent_mask"] = sent
+        idx_seg = indices[ph.start:ph.end][:, ph.cols]
+        if st is None:
+            sres = spec.sparse_run(p, hp, seg, idx_seg, z0, o)
+        else:
+            st = _elastic_remap(st, ph, n_prev, spec)
+            o["state0"] = st
+            sres = spec.sparse_run(p, hp, seg, idx_seg, None, o)
+        st = sres.state
+        n_prev = p.graph.n
+        for pt in pts:
+            if ph.start < pt <= ph.end:
+                lt = pt - ph.start
+                rec.push(pt, sres.z_trace[lt], z_star=p.z_star)
+                snap_d = cum_d.copy()
+                snap_d[ph.row_map] += sres.doubles_received[lt - 1]
+                snap_i = cum_i.copy()
+                snap_i[ph.row_map] += sres.ints_received[lt - 1]
+                out_d.append(snap_d)
+                out_i.append(snap_i)
+        cum_d[ph.row_map] += sres.doubles_received[seg - 1]
+        cum_i[ph.row_map] += sres.ints_received[seg - 1]
+        recon.append(sres.recon_max_err)
+        z_final = sres.z_trace[-1]
+    wall = time.perf_counter() - t0
+    rc = np.asarray(recon, dtype=np.float64)
+    recon_max = (
+        float(np.nanmax(rc)) if not np.all(np.isnan(rc)) else float("nan")
+    )
+    iters, dist2, cons, zs = rec.arrays()
+    extras: dict = {
+        "recon_max_err": recon_max,
+        "schedule": sched_x,
+        "churn_rows": total_rows,
+    }
+    if want_link:
+        extras["faults"] = {
+            "injected_broadcasts": injected_tot,
+            "delivered_broadcasts": delivered_tot,
+            "drop_rate": (
+                0.0 if injected_tot == 0
+                else 1.0 - delivered_tot / injected_tot
+            ),
+        }
+    return SolveResult(
+        method=method,
+        comm="sparse",
+        iters=iters,
+        dist2=dist2,
+        consensus=cons,
+        doubles_received=np.stack(out_d),
+        ints_received=np.stack(out_i),
+        wall_time=wall,
+        z=z_final,
+        state=st,
+        zs=zs,
+        extras=extras,
+    )
+
+
 # ---------------------------------------------------------------------------
 # solve_many(): the batched sweep entrypoint
 # ---------------------------------------------------------------------------
@@ -1750,7 +2463,7 @@ def solve_many(
     spec = get_solver(method)
     if comm not in COMM_BACKENDS:
         raise ValueError(f"unknown comm backend {comm!r}; one of {COMM_BACKENDS}")
-    fault_plan = (comm_options or {}).get("fault_plan")
+    fault_plan = as_fault_plan((comm_options or {}).get("fault_plan"))
     if problem.schedule is not None and fault_plan is not None:
         raise ValueError(
             "a graph schedule and a fault_plan cannot be combined in one run"
@@ -1758,12 +2471,17 @@ def solve_many(
     _check_capability(
         spec, comm, problem.spec.kind,
         schedule=problem.schedule is not None and len(problem.schedule) > 1,
-        churn=fault_plan is not None,
+        churn=fault_plan is not None and fault_plan.churn is not None,
         per_node_lam=np.ndim(problem.lam) > 0,
+        link_faults=fault_plan is not None and fault_plan.link is not None,
+        stragglers=(
+            fault_plan is not None and fault_plan.straggler is not None
+        ),
     )
     _validate_options(comm, comm_options)
-    # dynamic-network runs are per-entry sequential: the vmapped batched
-    # paths assume one static (graph, W, membership) for the whole scan
+    # dynamic-network and fault-injected runs are per-entry sequential:
+    # the vmapped batched paths assume one static fault-free (graph, W,
+    # membership) for the whole scan
     dynamic = problem.schedule is not None or fault_plan is not None
     if grid is None and seeds is None:
         raise ValueError("solve_many needs a grid, seeds, or both")
@@ -2505,9 +3223,22 @@ register_solver(
         comm_rounds=_mudag_rounds,
         # gradient tracking preserves mean(s) = mean(g) under ANY doubly
         # stochastic W, and the FastMix weight is re-baked per segment
-        # runner — schedules are sound; churn is not (the tracker's
-        # telescoped history refers to departed nodes' gradients)
+        # runner — schedules are sound. Churn needs the tracker RESET:
+        # the telescoped tracker state encodes the departed membership's
+        # mean gradient, so carrying it pins the survivors to the dead
+        # system's root (docs/algorithm.md). The reanchor re-runs the
+        # t=0 tracker seed (s = FastMix(g)) on the new membership, with
+        # momentum restarted (y = x).
         supports_schedule=True,
+        supports_churn=True,
+        reanchor=lambda st: (
+            st[0], st[0], jnp.zeros_like(st[2]), jnp.zeros_like(st[3]),
+            jnp.zeros((), jnp.int32),
+        ),
+        # FastMix applies the matvec inside a traced-trip-count fori_loop:
+        # a straggler buffer write there would escape the loop trace (the
+        # link mask is a read-only capture, so link faults are fine)
+        supports_stragglers=False,
     )
 )
 register_solver(
@@ -2520,6 +3251,16 @@ register_solver(
         problem_families=MINIMIZATION_FAMILIES,
         comm_rounds=_sliding_rounds,
         supports_schedule=True,  # tracking is W-agnostic (see mudag)
+        supports_churn=True,
+        # tracker reset on churn (see mudag); z itself carries over
+        reanchor=lambda st: (
+            st[0], jnp.zeros_like(st[1]), jnp.zeros_like(st[2]),
+            jnp.zeros((), jnp.int32),
+        ),
+        # off-round iterations exchange nothing physically — a
+        # last-delivered buffer updated by the where-gated matvec would
+        # record "deliveries" on rounds that never happened
+        supports_stragglers=False,
     )
 )
 
@@ -2623,6 +3364,16 @@ register_solver(
         # already have the full stochastic family (dsba/dsa)
         problem_families=("auc", "bilinear"),
         supports_schedule=True,  # tracking is W-agnostic (see mudag)
+        supports_churn=True,
+        # tracker reset on churn: keep the iterate and SAGA tables
+        # (ElasticGossip remaps their node axes), zero the dual tracker
+        # y and v_prev, and rewind t so the step re-seeds y = v on the
+        # new membership (see mudag)
+        reanchor=lambda st: (
+            st[0], st[1], st[2], st[3],
+            jnp.zeros_like(st[4]), jnp.zeros_like(st[5]),
+            jnp.zeros((), jnp.int32),
+        ),
     )
 )
 

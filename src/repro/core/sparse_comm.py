@@ -142,7 +142,7 @@ def _protocol_tables(graph: Graph, wt: np.ndarray) -> _Tables:
 
 def _closed_form_costs(
     nnz_log: np.ndarray, dist: np.ndarray, tail: int, d_total: int,
-    restart: bool = False,
+    restart: bool = False, sent: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Cumulative (doubles, ints) per node from the per-iteration nnz log.
 
@@ -156,6 +156,11 @@ def _closed_form_costs(
     are node-private (unlike the consensus-shared initializer of a fresh
     run), so they must be flooded alongside z^1 before any delta-based
     reconstruction can proceed.
+
+    ``sent``: optional (T, N) link-fault mask — a suppressed broadcast
+    (``sent[tau, l] == False``) never arrives anywhere, so neither its
+    nnz payload nor the per-message tail is charged (delivered-only
+    accounting; the one-time floods are fault-exempt, see run_sparse).
     """
     steps, n = nnz_log.shape
     ts = np.arange(steps)[:, None, None]  # (T, 1, 1)
@@ -163,6 +168,8 @@ def _closed_form_costs(
     t_src = ts - xi  # broadcast delta emission time
     arrived = (t_src >= 0) & (xi > 0)
     src = np.arange(n)[None, None, :]
+    if sent is not None:
+        arrived &= sent[np.clip(t_src, 0, None), src]
     nnz = nnz_log[np.clip(t_src, 0, None), src]  # (T, obs, src)
     ints_inc = np.where(arrived, nnz, 0).sum(axis=2)
     doubles_inc = np.where(arrived, nnz + tail, 0).sum(axis=2)
@@ -184,6 +191,10 @@ def run_sparse(
     engine: str = "vectorized",
     verify: bool = False,
     use_pallas: str = "auto",
+    sent_mask: np.ndarray | None = None,
+    ckpt_every: int | None = None,
+    ckpt_save=None,
+    resume=None,
 ) -> SparseRunResult:
     """Run DSBA-s (or DSA-s) for `steps` iterations on `graph`.
 
@@ -201,20 +212,56 @@ def run_sparse(
         intact), the t=0 mixing is ``w_tilde(w) @ (2 z - z_prev)`` from the
         carried iterates, and the segment-entry z^0 is flooded densely
         alongside z^1 (charged in the accounting — see _closed_form_costs).
-        ``z0`` must be None in that case.
+        A ``state0`` whose step counter was REANCHORED to 0 (a churn
+        segment — ``solvers._elastic_remap``) instead re-runs the eq. 31
+        anchored t=0 update, mixing ``w @ state0.z``. ``z0`` must be None
+        in either case.
+    sent_mask: optional (steps, N) bool — link-fault injection. A False
+        entry suppresses that node's delta broadcast for that iteration:
+        every observer's reconstruction proceeds on a zeroed delta (the
+        graceful-degradation path) and the closed-form accounting charges
+        neither payload nor tail for it. The one-time z^1 / restart z^0
+        floods are fault-exempt (they seed the protocol; dropping them
+        would desynchronize the ring permanently, not degrade it).
+        Vectorized engine only, and incompatible with ``verify`` (the
+        truth check asserts exact reconstruction by design).
+    ckpt_every / ckpt_save / resume: crash-safe chunked execution driven
+        by ``solvers.solve(..., checkpoint=/resume=)``. The scan runs in
+        chunks of ``ckpt_every`` iterations; after each boundary
+        ``ckpt_save(t_done, tree)`` receives the raw carry plus the
+        accumulated (zs, nnzs) logs. ``resume=(t_done, leaves)`` restores
+        from ``ckpt.load_checkpoint`` leaves and continues — bit-equal to
+        an uninterrupted run (absolute iteration numbers ride in the scan
+        xs, so chunk boundaries are invisible to the per-step math).
     """
     if steps < 1:
         raise ValueError("steps must be >= 1")
     if state0 is not None and z0 is not None:
         raise ValueError("pass either z0 (fresh start) or state0 (restart)")
+    if sent_mask is not None and verify:
+        raise ValueError(
+            "verify=True is incompatible with a link-fault sent_mask: the "
+            "relay invariant check asserts exact reconstruction, which "
+            "injected faults violate by design"
+        )
     if engine == "reference":
+        if sent_mask is not None:
+            raise ValueError(
+                "link faults need engine='vectorized' (the reference "
+                "per-observer oracle assumes lossless broadcasts)"
+            )
+        if ckpt_every is not None or resume is not None:
+            raise ValueError(
+                "checkpoint/resume needs engine='vectorized'"
+            )
         return _run_reference(cfg, data, graph, w, steps, indices, z0,
                               state0=state0)
     if engine != "vectorized":
         raise ValueError(f"unknown engine {engine!r}")
     return _run_vectorized(
         cfg, data, graph, w, steps, indices, z0, state0=state0,
-        verify=verify, use_pallas=use_pallas,
+        verify=verify, use_pallas=use_pallas, sent_mask=sent_mask,
+        ckpt_every=ckpt_every, ckpt_save=ckpt_save, resume=resume,
     )
 
 
@@ -222,13 +269,17 @@ def run_sparse(
 # Vectorized engine
 # ---------------------------------------------------------------------------
 
-def _sparse_scan_key(cfg, data, graph, w, verify, kernel_mode):
+def _sparse_scan_key(cfg, data, graph, w, verify, kernel_mode,
+                     faulty=False):
     """(key, guards) for one compiled relay scan (see core.runner_cache).
 
     alpha/lam are NOT keyed — they are traced scan arguments, so a
     hyperparameter sweep over the same (method, problem shape, graph)
-    reuses one executable. ``verify`` changes the carry structure and
-    ``kernel_mode`` the densification lowering, so both recompile.
+    reuses one executable. ``verify`` changes the carry structure,
+    ``kernel_mode`` the densification lowering, and ``faulty`` the scan
+    xs (the per-iteration sent mask), so each recompiles. The fault-free
+    program stays byte-identical to the pre-fault build — p=0 plans are
+    bit-equal by ROUTING, not by masked arithmetic.
     """
     key = (
         "relay",
@@ -236,11 +287,13 @@ def _sparse_scan_key(cfg, data, graph, w, verify, kernel_mode):
         runner_cache.problem_fingerprint(data, cfg.spec, graph, w),
         bool(verify),
         kernel_mode,
+        bool(faulty),
     )
     return key, (data,)
 
 
-def _build_sparse_scan(cfg, data, graph, w, *, verify, kernel_mode):
+def _build_sparse_scan(cfg, data, graph, w, *, verify, kernel_mode,
+                       faulty=False):
     """Compile the whole-run relay scan with (alpha, lam) traced.
 
     Returns ``(scan, tb)``: the jitted
@@ -326,7 +379,10 @@ def _build_sparse_scan(cfg, data, graph, w, *, verify, kernel_mode):
 
     def body(carry, xs, mix0, alpha, lam, hp):
         state, z1, R, DD, SR, Z, err, ok = carry
-        t, i_t = xs
+        if faulty:
+            t, i_t, sent_t = xs
+        else:
+            t, i_t = xs
         jt = t % depth
         jtm1 = (t - 1) % depth
         z_t = state.z
@@ -416,8 +472,16 @@ def _build_sparse_scan(cfg, data, graph, w, *, verify, kernel_mode):
 
         # -- advance all nodes with the shared local update -----------------
         state = step(state, i_t, mix_rows, hp=hp)
-        DD = DD.at[jt].set(densify_delta(state))
+        dd = densify_delta(state)
         nnz_t = jnp.sum(state.dval_prev != 0, axis=-1).astype(jnp.int32)
+        if faulty:
+            # a suppressed broadcast: observers see a ZEROED delta in the
+            # ring (their reconstructions degrade gracefully) and the nnz
+            # log drops the row (delivered-only accounting). The source's
+            # own row of R stays exact — a node always has its own state.
+            dd = jnp.where(sent_t[:, None], dd, jnp.zeros_like(dd))
+            nnz_t = jnp.where(sent_t, nnz_t, 0)
+        DD = DD.at[jt].set(dd)
         return (state, z1, R, DD, SR, Z, err, ok), (state.z, nnz_t)
 
     return jax.jit(scan_all), tb
@@ -468,9 +532,28 @@ def _resolve_kernel_mode(use_pallas: str) -> str:
     return use_pallas
 
 
+def _carry_from_leaves(carry0, leaves):
+    """Rebuild a relay carry from ``ckpt.load_checkpoint`` leaves.
+
+    ``carry0`` templates the structure (the carry is run-length
+    independent); leaves are path-matched under the ``{"carry": ...}``
+    wrapper the checkpointing driver saved them with.
+    """
+    from repro.ckpt.checkpoint import _flatten_with_paths
+
+    paths, tleaves, treedef = _flatten_with_paths({"carry": carry0})
+    new = []
+    for p, like in zip(paths, tleaves):
+        if p not in leaves:
+            raise ValueError(f"checkpoint is missing carry leaf {p!r}")
+        new.append(jnp.asarray(leaves[p], getattr(like, "dtype", None)))
+    return jax.tree_util.tree_unflatten(treedef, new)["carry"]
+
+
 def _run_vectorized(
     cfg, data, graph, w, steps, indices, z0, *, state0=None, verify,
-    use_pallas
+    use_pallas, sent_mask=None, ckpt_every=None, ckpt_save=None,
+    resume=None,
 ) -> SparseRunResult:
     spec = cfg.spec
     n = data.n_nodes
@@ -478,10 +561,19 @@ def _run_vectorized(
     D = data.d + tail
     dt = data.val.dtype
     restart = state0 is not None
+    reanchored = restart and int(np.asarray(state0.step)) == 0
     if restart:
         z0 = np.asarray(state0.z)
     elif z0 is None:
         z0 = np.zeros((n, D), dtype=dt)
+    faulty = sent_mask is not None
+    if faulty:
+        sent_mask = np.asarray(sent_mask, dtype=bool)
+        if sent_mask.shape != (steps, n):
+            raise ValueError(
+                f"sent_mask must be (steps, N) = ({steps}, {n}), "
+                f"got {sent_mask.shape}"
+            )
 
     # This path follows the protocol spec rather than kernels.ops "auto"
     # (which falls back to the jnp oracle off-TPU): the relay's delta
@@ -489,11 +581,14 @@ def _run_vectorized(
     # being the CPU fallback. Resolve "auto" here, dispatch through ops.
     kernel_mode = _resolve_kernel_mode(use_pallas)
 
-    key, guards = _sparse_scan_key(cfg, data, graph, w, verify, kernel_mode)
+    key, guards = _sparse_scan_key(
+        cfg, data, graph, w, verify, kernel_mode, faulty=faulty
+    )
     scan, tb = runner_cache.SPARSE.get_or_build(
         key, guards,
         lambda: _build_sparse_scan(
-            cfg, data, graph, w, verify=verify, kernel_mode=kernel_mode
+            cfg, data, graph, w, verify=verify, kernel_mode=kernel_mode,
+            faulty=faulty,
         ),
     )
     depth, dmax = tb.depth, tb.dmax
@@ -501,7 +596,14 @@ def _run_vectorized(
     carry0 = _relay_carry0(cfg, data, z0, depth, verify, state0=state0)
     ts = jnp.arange(steps, dtype=jnp.int32)
     idx_j = jnp.asarray(indices[:steps], jnp.int32)
-    if restart:
+    if reanchored:
+        # a churn-remapped state: the step counter was reset to 0 (the
+        # DSBA reanchor), so the scan's first iteration re-runs the
+        # eq. 31 anchored update — its t=0 mixing is W against the
+        # remapped iterates. The restart z^0 flood is still charged:
+        # post-churn iterates are node-private, not consensus-shared.
+        mix0 = jnp.asarray(w @ np.asarray(state0.z), dt)
+    elif restart:
         # carried state: step > 0 routes through the eq. 29 psi path, whose
         # t=0 mixing is W~ against (2 z - z_prev) of the carried iterates
         mix0 = jnp.asarray(
@@ -512,17 +614,60 @@ def _run_vectorized(
         mix0 = jnp.asarray(w @ z0, dt)  # t=0: z^0 is consensus-shared
     hp = {"alpha": float(cfg.alpha), "lam": float(cfg.lam)}
 
-    (state_f, _, _, _, _, _, err, ok), (zs, nnzs) = scan(
-        carry0, (ts, idx_j), mix0, hp
-    )
+    def seg_xs(lo, hi):
+        xs = (ts[lo:hi], idx_j[lo:hi])
+        if faulty:
+            xs = (*xs, jnp.asarray(sent_mask[lo:hi]))
+        return xs
+
+    if ckpt_every is None and resume is None:
+        carry_f, (zs, nnzs) = scan(carry0, seg_xs(0, steps), mix0, hp)
+        zs, nnzs = np.asarray(zs), np.asarray(nnzs)
+    else:
+        # chunked execution of the SAME cached scan: absolute iteration
+        # numbers ride in the xs, so chunk boundaries are invisible to
+        # the per-step math — resumed runs are bit-equal to uninterrupted
+        start = 0
+        carry = carry0
+        zs_parts, nnz_parts = [], []
+        if resume is not None:
+            t_done, leaves = resume
+            if not 0 < t_done <= steps:
+                raise ValueError(
+                    f"resume step {t_done} outside (0, {steps}]"
+                )
+            carry = _carry_from_leaves(carry0, leaves)
+            zs_parts.append(np.asarray(leaves["['zs']"]))
+            nnz_parts.append(np.asarray(leaves["['nnzs']"]))
+            start = int(t_done)
+        every = int(ckpt_every) if ckpt_every is not None else steps
+        marks = sorted({*range(start + every, steps, every), steps})
+        prev = start
+        for mk in marks:
+            if mk <= prev:
+                continue  # resumed at (or past) this boundary already
+            carry, (zs_c, nnz_c) = scan(carry, seg_xs(prev, mk), mix0, hp)
+            zs_parts.append(np.asarray(zs_c))
+            nnz_parts.append(np.asarray(nnz_c))
+            prev = mk
+            if ckpt_save is not None and mk % every == 0:
+                ckpt_save(mk, {
+                    "carry": carry,
+                    "zs": np.concatenate(zs_parts),
+                    "nnzs": np.concatenate(nnz_parts),
+                })
+        carry_f = carry
+        zs = np.concatenate(zs_parts)
+        nnzs = np.concatenate(nnz_parts)
+    state_f, err, ok = carry_f[0], carry_f[-2], carry_f[-1]
 
     if verify and not bool(ok):
         raise ProtocolViolation(
             "relay schedule consumed a value before its arrival"
         )
-    z_trace = np.concatenate([np.asarray(z0)[None], np.asarray(zs)])
+    z_trace = np.concatenate([np.asarray(z0)[None], zs])
     doubles, ints = _closed_form_costs(
-        np.asarray(nnzs), tb.dist, tail, D, restart=restart
+        nnzs, tb.dist, tail, D, restart=restart, sent=sent_mask
     )
     return SparseRunResult(
         z_trace=z_trace,
@@ -739,7 +884,11 @@ def _run_reference(
                         s_next[u, l] = s + 1
 
         # ---- mixing rows from each node's OWN reconstruction store --------
-        if t == 0 and restart:
+        if t == 0 and restart and int(np.asarray(state0.step)) == 0:
+            # churn-reanchored state (step counter reset to 0): the scan
+            # re-runs the eq. 31 anchored update, mixing W @ z
+            mix = w @ np.asarray(state0.z)
+        elif t == 0 and restart:
             # carried state: the eq. 29 psi path mixes W~ against
             # (2 z - z_prev) of the carried iterates
             mix = wt @ (2.0 * np.asarray(state0.z)

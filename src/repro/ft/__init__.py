@@ -1,1 +1,32 @@
-from repro.ft.elastic import ElasticGossip, HeartbeatMonitor  # noqa: F401
+"""Fault tolerance: elastic membership, heartbeats, and fault plans.
+
+Re-exports are lazy so that ``repro.ft.faults`` (plain numpy fault-plan
+schemas used by ``core.solvers``) can be imported without pulling in the
+elastic/gossip training stack.
+"""
+from __future__ import annotations
+
+_ELASTIC = ("ElasticGossip", "HeartbeatMonitor", "BoundedStalenessBuffer")
+_FAULTS = (
+    "ChurnEvent",
+    "ChurnPlan",
+    "FaultPlan",
+    "LinkFault",
+    "StragglerSpec",
+    "as_fault_plan",
+)
+
+__all__ = list(_ELASTIC + _FAULTS)
+
+
+def __getattr__(name: str):
+    """Resolve re-exports on first access (PEP 562)."""
+    if name in _ELASTIC:
+        from repro.ft import elastic
+
+        return getattr(elastic, name)
+    if name in _FAULTS:
+        from repro.ft import faults
+
+        return getattr(faults, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -55,10 +55,26 @@ class HeartbeatMonitor:
         return dead
 
     def remove(self, pod: int):
-        self.last_seen.pop(pod, None)
+        """Stop monitoring ``pod``. Raises KeyError if the pod is not
+        monitored — a silent no-op here would mask a supervisor
+        double-shrink (the same dead pod removed twice)."""
+        if pod not in self.last_seen:
+            raise KeyError(
+                f"pod {pod} is not monitored; known: {sorted(self.last_seen)}"
+            )
+        del self.last_seen[pod]
         self.declared_dead.discard(pod)
 
     def add(self, pod: int):
+        """Start monitoring ``pod`` as of the current tick. Raises
+        ValueError if the pod is already monitored — resetting a live
+        pod's deadline implicitly would hide a join/id collision; call
+        ``heartbeat(pod)`` to refresh or ``remove(pod)`` first."""
+        if pod in self.last_seen:
+            raise ValueError(
+                f"pod {pod} is already monitored; heartbeat() refreshes "
+                "it, remove() + add() re-registers it"
+            )
         self.last_seen[pod] = self.tick_now
         self.declared_dead.discard(pod)
 

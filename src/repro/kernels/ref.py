@@ -103,10 +103,14 @@ def decode_attention_ref(
 
 def ssd_chunk_ref(xdt, cum, Bc, Cc):
     """Within-chunk SSD: (y_intra, chunk states). Shapes as ssd_chunk_fwd."""
-    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,nh)
     Q = xdt.shape[2]
-    tri = jnp.tril(jnp.ones((Q, Q), bool))
-    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,nh)
+    # mask BEFORE the exp: above-diagonal diffs can overflow exp to inf,
+    # and jax.grad(where(tri, exp(diff), 0)) then propagates inf * 0 = NaN
+    # cotangents through the masked-out lanes (the exp VJP multiplies the
+    # zero upstream cotangent by the inf primal)
+    decay = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
     scores = jnp.einsum("bcis,bcjs->bcij", Cc, Bc)
     y = jnp.einsum("bcij,bcijh,bcjhd->bcihd", scores, decay, xdt)
     dte = jnp.exp(cum[:, :, -1:, :] - cum)

@@ -143,9 +143,11 @@ def _ssd_chunked(xh, dt, a_log, Bc, Cc, chunk, h0=None, head_block=0,
         y_intra, states = KO.ssd_chunk(xdt, cum, Bc_, Cc_, use_pallas=kernel)
     else:
         # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xdt_j
-        decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,nh)
-        tri = jnp.tril(jnp.ones((Q, Q), bool))
-        decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+        # (masked before the exp — see kernels/ref.py ssd_chunk_ref for why
+        # the naive where(tri, exp(diff), 0) NaNs the cotangents)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+        diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,nh)
+        decay = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
         scores = jnp.einsum("bcis,bcjs->bcij", Cc_, Bc_)  # (B, nc, i, j)
         y_intra = jnp.einsum("bcij,bcijh,bcjhd->bcihd", scores, decay, xdt)
 

@@ -12,7 +12,10 @@ Admission policy (documented in docs/serving.md): FIFO, admit while a
 free slot exists and the pool can cover the prompt; a request larger
 than ``prompt_pad`` is rejected at submit.  Preemption restarts the
 victim from scratch — generated tokens are discarded, the original
-request returns to the FRONT of the queue (it was admitted first).
+request returns to the FRONT of the queue (it was admitted first).  A
+request preempted ``max_preempts`` times is exempt from further
+preemption (oldest-first fallback among exempt slots) so no request
+thrashes forever.
 
 Per-step counters (queue depth, active slots, pool occupancy,
 admissions/evictions/preemptions, tokens generated) accumulate in a
@@ -62,9 +65,16 @@ class StepStats:
 
 @dataclasses.dataclass
 class ServeStats:
-    """Per-step counter trace for a scheduler run."""
+    """Per-step counter trace for a scheduler run.
+
+    ``preempt_counts`` maps request id -> how many times that request was
+    preempted over the run (the starvation-guard witness: no entry may
+    exceed ``Scheduler.max_preempts`` unless the oldest-first fallback had
+    no non-exempt victim left).
+    """
 
     steps: list[StepStats] = dataclasses.field(default_factory=list)
+    preempt_counts: dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def total_tokens(self) -> int:
@@ -101,11 +111,13 @@ class Scheduler:
         *,
         temperature: float = 0.0,
         seed: int = 0,
+        max_preempts: int = 3,
     ):
         self.cfg = cfg
         self.params = params
         self.pool = CachePool(cfg, pool_cfg)
         self.temperature = temperature
+        self.max_preempts = max_preempts
         self._rng = np.random.default_rng(seed)
         self.queue: deque[Request] = deque()
         self.active: dict[int, _Active] = {}
@@ -210,18 +222,35 @@ class Scheduler:
     # -- preemption ---------------------------------------------------------
 
     def _preempt_youngest(self, protect: int) -> bool:
-        """Evict the most recently admitted active slot (except
-        `protect`) back to the queue front, discarding its progress."""
-        for slot in reversed(self._admit_order):
-            if slot == protect:
-                continue
-            st = self.active.pop(slot)
-            self._admit_order.remove(slot)
-            self.pool.release(slot)
-            self._cur_tok[slot, 0] = 0
-            self.queue.appendleft(st.req)
-            return True
-        return False
+        """Evict an active slot (except `protect`) back to the queue
+        front, discarding its progress.
+
+        Starvation guard: plain youngest-first can thrash a request
+        forever at high load (admit -> immediately re-preempt, every
+        step). A request preempted ``max_preempts`` times becomes EXEMPT:
+        the victim search is youngest-first over non-exempt slots, and
+        only when every candidate is exempt does it fall back to the
+        OLDEST candidate (which has been resident longest, so evicting
+        it lets the exempt cohort drain before it thrashes anew)."""
+        candidates = [s for s in self._admit_order if s != protect]
+        victim = next(
+            (s for s in reversed(candidates)
+             if self.stats.preempt_counts.get(self.active[s].req.rid, 0)
+             < self.max_preempts),
+            candidates[0] if candidates else None,
+        )
+        if victim is None:
+            return False
+        st = self.active.pop(victim)
+        self._admit_order.remove(victim)
+        self.pool.release(victim)
+        self._cur_tok[victim, 0] = 0
+        self.queue.appendleft(st.req)
+        rid = st.req.rid
+        self.stats.preempt_counts[rid] = (
+            self.stats.preempt_counts.get(rid, 0) + 1
+        )
+        return True
 
     def _ensure_capacity(self) -> int:
         """Every active slot gets a page for this step's K/V write —

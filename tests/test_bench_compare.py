@@ -105,6 +105,36 @@ def test_run_payload_tags_serve_informational():
     ]
 
 
+def test_run_payload_tags_faults_informational():
+    """benchmarks.run must tag every faults_* row informational: the
+    degradation curve lives in the derived column; the entry's number is
+    a container-timed whole-solve wall clock nobody should gate on."""
+    from benchmarks.run import informational_entries
+
+    rows = [("faults_dsba_p0", 10.0, ""), ("faults_mudag_p0.4", 10.0, ""),
+            ("dsba_step_d2000", 10.0, "")]
+    assert informational_entries(rows) == [
+        "faults_dsba_p0", "faults_mudag_p0.4"
+    ]
+
+
+def test_committed_faults_baseline_is_fully_informational():
+    """The committed BENCH_faults.json artifact: schema 1, every entry in
+    its own informational list — the whole family reports, never gates."""
+    import pathlib
+
+    path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_faults.json"
+    payload = json.loads(path.read_text())
+    assert payload["schema"] == 1
+    names = set(payload["entries"])
+    assert names and all(n.startswith("faults_") for n in names)
+    assert set(payload["informational"]) == names
+    # the curve is the artifact: every derived column carries either an
+    # iteration count (p=0) or a plateau level (p>0)
+    for name, derived in payload["derived"].items():
+        assert ("iters_to_1e-6=" in derived) or ("plateau=" in derived)
+
+
 def test_unknown_schema_rejected(tmp_path):
     p = tmp_path / "x.json"
     p.write_text(json.dumps({"schema": 99, "entries": {}}))

@@ -132,15 +132,53 @@ def test_churn_on_unsupporting_method_raises_before_factory():
             method, "dense", "ridge")
 
 
-def test_churn_under_sparse_comm_raises():
-    """The delta relay's protocol tables cover the whole graph: no churn."""
+def test_churn_under_sparse_comm_runs():
+    """Churn became legal on the sparse backend (the relay's protocol
+    tables are re-derived per membership segment and chained via
+    ``state0``): a kill on dsba/sparse runs and stays finite. The
+    parity-vs-dense pin lives in tests/test_faults.py."""
     from repro.core.solvers import ChurnEvent, ChurnPlan
 
     plan = ChurnPlan((ChurnEvent(at=3, kind="kill", nodes=(3,)),))
-    with pytest.raises(CapabilityError) as ei:
-        solve(_problem("ridge"), "dsba", comm="sparse", steps=6,
-              record_every=3, seed=0, comm_options={"fault_plan": plan})
-    assert (ei.value.method, ei.value.comm) == ("dsba", "sparse")
+    res = solve(_problem("ridge"), "dsba", comm="sparse", steps=6,
+                record_every=3, seed=0, comm_options={"fault_plan": plan})
+    assert res.z.shape[0] == N - 1
+    assert np.isfinite(res.z).all()
+    assert "churn_rows" in res.extras
+
+
+def test_stragglers_outside_dense_raise():
+    """Straggler buffers are a dense-backend feature: the sparse relay's
+    reconstruction waves and the sharded ppermute schedule both have no
+    last-delivered slot to serve stale values from."""
+    from repro.core.solvers import FaultPlan, StragglerSpec
+
+    plan = FaultPlan(straggler=StragglerSpec(p=0.3, max_staleness=2))
+    for comm in ("sparse", "sharded"):
+        with pytest.raises(CapabilityError) as ei:
+            solve(_problem("ridge"), "dsba", comm=comm, steps=6,
+                  record_every=3, seed=0,
+                  comm_options={"fault_plan": plan})
+        assert (ei.value.method, ei.value.comm) == ("dsba", comm)
+
+
+def test_stragglers_on_unsupporting_method_raise():
+    """mudag/sliding advertise supports_stragglers=False (FastMix's
+    fori_loop / off-round gating cannot host the delivery buffers):
+    typed refusal before any factory runs."""
+    from repro.core.solvers import FaultPlan, StragglerSpec
+
+    plan = FaultPlan(straggler=StragglerSpec(p=0.3, max_staleness=2))
+    for method in METHODS:
+        caps = available_solvers()[method]
+        if caps.supports_stragglers or not caps.supports("dense", "ridge"):
+            continue
+        with pytest.raises(CapabilityError) as ei:
+            solve(_problem("ridge"), method, comm="dense", steps=6,
+                  record_every=3, seed=0, comm_options={"fault_plan": plan},
+                  **HP.get(method, {}))
+        assert (ei.value.method, ei.value.comm, ei.value.family) == (
+            method, "dense", "ridge")
 
 
 def test_per_node_lam_outside_dense_raises():

@@ -4,6 +4,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_reduced
 from repro.core.gossip import (
@@ -54,6 +55,34 @@ def test_heartbeat_reports_each_death_exactly_once():
     hb.add(2)
     assert tick_with_live() == []
     assert tick_with_live() == [2]
+
+
+def test_heartbeat_membership_is_explicit():
+    """remove() of an unknown pod and add() of a monitored pod both raise
+    (the silent no-op / silent-reset behaviors masked supervisor bugs:
+    double-shrink of the same dead pod, join-id collisions)."""
+    hb = HeartbeatMonitor(2, timeout=2)
+    with pytest.raises(KeyError, match="not monitored"):
+        hb.remove(7)
+    with pytest.raises(ValueError, match="already monitored"):
+        hb.add(1)
+    # remove -> add re-registers; double-remove raises
+    hb.remove(1)
+    with pytest.raises(KeyError, match="not monitored"):
+        hb.remove(1)
+    hb.add(1)
+    assert 1 in hb.last_seen
+    # a declared-dead pod is still monitored (late heartbeats resurrect),
+    # so add() of it raises and remove() of it works
+    hb2 = HeartbeatMonitor(2, timeout=2)
+    for _ in range(2):
+        hb2.heartbeat(0)
+        dead = hb2.tick()
+    assert dead == [1]
+    with pytest.raises(ValueError, match="already monitored"):
+        hb2.add(1)
+    hb2.remove(1)
+    assert 1 not in hb2.declared_dead and 1 not in hb2.last_seen
 
 
 def _setup(n_pods=4):

@@ -193,6 +193,67 @@ def test_elastic_shrink_grow_roundtrips_pytree_shapes(n, dead, seed):
 
 
 # ---------------------------------------------------------------------------
+# fault plans: delivered-message accounting
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(3, 10),
+    st.floats(0.0, 1.0),
+    st.floats(0.0, 1.0),
+    st.integers(1, 5),
+    st.integers(5, 40),
+    st.integers(0, 100),
+)
+def test_fault_plan_accounting_monotone_bounded_exact_at_p0(
+    n, p_link, p_strag, bound, steps, seed
+):
+    """For ANY valid FaultPlan the delivered-message accounting is
+    (a) monotone: composing a second fault family never increases the
+    delivered count, and the cumulative count never decreases in t;
+    (b) bounded by the no-fault accounting (deg(u) per node per round);
+    (c) exact at p=0: masks are all-True and the counts equal the
+    plan-free accounting bit-for-bit."""
+    from repro.ft.faults import (
+        LinkFault, StragglerSpec, delivered_in_messages,
+        link_delivered_mask, straggler_delivered_mask,
+    )
+
+    g = mixing.erdos_renyi_graph(n, 0.6, seed=seed)
+    deg = np.asarray(g.degrees, dtype=np.int64)
+
+    lm = link_delivered_mask(LinkFault(p=p_link, seed=seed), g, steps)
+    sm = straggler_delivered_mask(
+        StragglerSpec(p=p_strag, max_staleness=bound, seed=seed), n, steps
+    )
+    d_none = delivered_in_messages(g, None, None, steps)
+    d_link = delivered_in_messages(g, lm, None, steps)
+    d_both = delivered_in_messages(g, lm, sm, steps)
+
+    # (b) bounded by the no-fault count, which is deg(u) every iteration
+    np.testing.assert_array_equal(d_none, np.broadcast_to(deg, (steps, n)))
+    assert (d_both >= 0).all()
+    # (a) AND-composition is monotone, per (iteration, node)
+    assert (d_both <= d_link).all() and (d_link <= d_none).all()
+    # cumulative delivered never decreases
+    assert (np.diff(np.cumsum(d_both.sum(axis=1))) >= 0).all()
+    # staleness bound: no node's delivery gap ever exceeds the bound
+    gaps = np.zeros(n, dtype=int)
+    for t in range(steps):
+        gaps = np.where(sm[t], 0, gaps + 1)
+        assert (gaps <= bound).all()
+    # (c) exact at p=0 — all-True masks, bit-equal to the plan-free count
+    lm0 = link_delivered_mask(LinkFault(p=0.0, seed=seed), g, steps)
+    sm0 = straggler_delivered_mask(
+        StragglerSpec(p=0.0, max_staleness=bound, seed=seed), n, steps
+    )
+    assert lm0.all() and sm0.all()
+    np.testing.assert_array_equal(
+        delivered_in_messages(g, lm0, sm0, steps), d_none
+    )
+
+
+# ---------------------------------------------------------------------------
 # dataset invariants
 # ---------------------------------------------------------------------------
 

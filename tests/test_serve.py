@@ -295,3 +295,61 @@ def test_oom_preemption_restarts_victim():
     assert set(results) == {0, 1}
     assert all(r.shape == (10,) for r in results.values())
     assert stats.preemptions >= 1
+
+
+def test_preemption_victim_selection_starvation_guard():
+    """Victim policy unit check: youngest-first among non-exempt slots;
+    when every candidate has hit max_preempts, oldest-first fallback."""
+    cfg, params = _make("minitron_8b")
+    sch = Scheduler(cfg, params, _PC, max_preempts=1)
+    for r in _requests(cfg, 3, max_new=8):
+        sch.submit(r)
+    sch._admit()
+    assert len(sch._admit_order) == 3
+    oldest, mid, youngest = sch._admit_order
+    y_rid = sch.active[youngest].req.rid
+
+    # plain youngest-first while nobody is exempt
+    assert sch._preempt_youngest(protect=oldest)
+    assert sch.stats.preempt_counts == {y_rid: 1}
+    assert youngest not in sch.active
+
+    # the youngest survivor is now `mid`; exempt it -> falls to oldest
+    m_rid = sch.active[mid].req.rid
+    sch.stats.preempt_counts[m_rid] = 1
+    assert sch._preempt_youngest(protect=-1)
+    o_rid = sch.stats.preempt_counts.get(sch.queue[0].rid)
+    assert sch.queue[0].rid not in (y_rid, m_rid) and o_rid == 1
+    assert oldest not in sch.active
+
+    # all remaining candidates exempt -> oldest-first fallback still evicts
+    assert sch._preempt_youngest(protect=-1)
+    assert sch.stats.preempt_counts[m_rid] == 2  # exceeded cap via fallback
+    assert not sch.active
+    assert not sch._preempt_youngest(protect=-1)  # nothing left
+
+
+def test_starved_request_completes_with_frozen_traces():
+    """A thrash-prone workload (pool covers barely more than one full
+    sequence, several competing requests): the starvation guard caps
+    per-request preemptions, every request completes, and the thrash
+    never triggers a recompile after warmup."""
+    cfg, params = _make("minitron_8b")
+    pc = PoolConfig(
+        max_batch=2, block_size=4, n_blocks=8, max_len=16, prompt_pad=8
+    )
+    sch = Scheduler(cfg, params, pc, max_preempts=2)
+    reqs = [
+        Request(i, np.arange(1, 7, dtype=np.int64), max_new_tokens=10)
+        for i in range(4)
+    ]
+    for r in reqs:
+        sch.submit(r)
+    for _ in range(3):  # warmup: prefill + decode + pool jits all traced
+        sch.step()
+    warm = dict(sch.trace_counts)
+    results, stats = sch.run()
+    assert set(results) == {0, 1, 2, 3}
+    assert all(r.shape == (10,) for r in results.values())
+    assert stats.preemptions >= 2 and stats.preempt_counts
+    assert sch.trace_counts == warm

@@ -81,8 +81,17 @@ def test_registry_exposes_capability_records():
         "ssda": False, "mudag": True, "sliding": True, "dsgda": True,
         "personal": True,
     }
+    # churn covers the stochastic family AND the tracking family (whose
+    # reanchor zeroes trackers and rewinds t so the t==0 branch re-seeds
+    # from the surviving membership — tests/test_faults.py)
     assert {n for n, c in avail.items() if c.supports_churn} == {
-        "dsba", "dsa"
+        "dsba", "dsa", "mudag", "sliding", "dsgda"
+    }
+    # stragglers: dense-only delivery buffers; mudag/sliding run their
+    # gossip matvecs inside traced fori_loops where buffer writes can't
+    # live, so they type out of the straggler axis (link faults stay legal)
+    assert {n for n, c in avail.items() if c.supports_stragglers} == {
+        "dsba", "dsa", "extra", "dlm", "ssda", "dsgda", "personal"
     }
     assert {n for n, c in avail.items() if c.supports_per_node_lam} == {
         "dsba", "dsa", "personal"
